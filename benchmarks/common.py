@@ -1,0 +1,72 @@
+"""Benchmark substrate.
+
+This container has ONE physical core, so wall-clock "multi-GPU" timing is
+meaningless in-process. We follow the paper's own §5.5 methodology instead:
+each device's grid is executed separately and timed; the parallel makespan
+is max(per-device EC time) plus a communication model
+(bytes / modelled link bandwidth). Figures report the same RATIOS the paper
+reports (speedups, balance overheads, breakdowns), not absolute times.
+
+Multi-virtual-device figures run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (never in the main
+process — tests/benches must see one device).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Callable
+
+import numpy as np
+
+HERE = os.path.dirname(__file__)
+OUT_DIR = os.path.join(HERE, "..", "experiments", "bench")
+
+# communication model (single-node PCIe-class, as in the paper's platform)
+H2D_BW = 64e9          # B/s host→device (paper: PCIe 64 GB/s)
+P2P_BW = 50e9          # B/s device↔device
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_subprocess_bench(script: str, *, devices: int = 8,
+                         timeout: int = 3600) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-4000:])
+    line = next(l for l in proc.stdout.splitlines()
+                if l.startswith("RESULT_JSON:"))
+    return json.loads(line[len("RESULT_JSON:"):])
+
+
+def save_result(name: str, payload: dict) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+def print_csv(name: str, rows: list[dict]) -> None:
+    if not rows:
+        print(f"{name}: no rows")
+        return
+    keys = list(rows[0])
+    print(f"# {name}")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r[k]) for k in keys))

@@ -1,0 +1,88 @@
+"""Render EXPERIMENTS.md tables from experiments/{dryrun,bench} JSONs.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+BENCH = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def _load(pattern):
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN, pattern))):
+        with open(p) as f:
+            r = json.load(f)
+        r["_file"] = os.path.basename(p)
+        out.append(r)
+    return out
+
+
+def _fmt_ms(x):
+    return f"{x*1e3:,.1f}"
+
+
+def roofline_md(pattern, title):
+    rows = _load(pattern)
+    print(f"\n### {title}\n")
+    print("| arch | cell | C (ms) | M (ms) | X (ms) | bound | frac | "
+          "mem GB/chip |")
+    print("|---|---|--:|--:|--:|---|--:|--:|")
+    for r in rows:
+        if "__baseline" in r["_file"]:
+            continue
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['cell']} | — | — | — | FAIL | — | — |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        gb = (mem.get("argument_size_in_bytes", 0) +
+              mem.get("temp_size_in_bytes", 0)) / 1e9
+        print(f"| {r['arch']} | {r['cell']} | {_fmt_ms(t['t_compute'])} | "
+              f"{_fmt_ms(t['t_memory'])} | {_fmt_ms(t['t_collective'])} | "
+              f"{t['bottleneck'][2:]} | {t['roofline_fraction']:.3f} | "
+              f"{gb:.1f} |")
+
+
+def bench_md(name, title, cols):
+    path = os.path.join(BENCH, f"{name}.json")
+    if not os.path.exists(path):
+        print(f"\n### {title}\n(not yet run)")
+        return
+    with open(path) as f:
+        data = json.load(f)
+    rows = data["rows"]
+    print(f"\n### {title}\n")
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "---|" * len(cols))
+    for r in rows:
+        print("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+
+
+def main():
+    roofline_md("*__pod1.json", "Roofline — single pod (16×16), baseline")
+    roofline_md("*__pod2.json", "Roofline — multi-pod (2×16×16)")
+    roofline_md("*_a2a.json", "a2a MoE dispatch (hillclimb)")
+    roofline_md("*_dots.json", "remat=dots (hillclimb)")
+    roofline_md("cp_*.json", "CP / paper workload (billion-scale shapes)")
+    bench_md("fig5_total_time", "Fig 5 — total execution time",
+             ["tensor", "nnz", "amped_s", "equal_nnz_s", "blco_like_s",
+              "speedup_vs_blco"])
+    bench_md("fig6_partitioning", "Fig 6 — partitioning impact",
+             ["tensor", "amped_s", "equal_nnz_s", "speedup"])
+    bench_md("fig7_breakdown", "Fig 7 — execution-time breakdown",
+             ["tensor", "ec_pct", "h2d_pct", "p2p_pct"])
+    bench_md("fig8_balance", "Fig 8 — compute-time overhead across devices",
+             ["tensor", "overhead_pct", "r"])
+    bench_md("fig9_scaling", "Fig 9 — scalability",
+             ["tensor", "devices", "total_s", "speedup"])
+    bench_md("fig10_preprocessing", "Fig 10 — preprocessing time",
+             ["tensor", "nnz", "preprocess_s", "per_mode_s"])
+
+
+if __name__ == "__main__":
+    main()

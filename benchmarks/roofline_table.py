@@ -1,0 +1,74 @@
+"""Roofline table: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (one row per arch × cell × mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import OUT_DIR, print_csv, save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(pattern: str = "*.json") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            rec = json.load(f)
+        rec["_file"] = os.path.basename(path)
+        out.append(rec)
+    return out
+
+
+def table(pattern: str = "*pod1.json") -> list[dict]:
+    rows = []
+    for rec in load_records(pattern):
+        if not rec.get("ok"):
+            rows.append({"arch": rec["arch"], "cell": rec["cell"],
+                         "mesh": "x".join(map(str, rec["mesh"])),
+                         "status": "FAIL", "error": rec.get("error", "")[:60]})
+            continue
+        t = rec["roofline"]
+        meta = rec.get("meta", {})
+        n_act = meta.get("active_params") or 0
+        seq = meta.get("seq") or 0
+        batch = meta.get("batch") or 0
+        kind = meta.get("kind", "")
+        chips = 1
+        for d in rec["mesh"]:
+            chips *= d
+        # MODEL_FLOPS per chip: 6·N·D train, 2·N·D prefill, 2·N·B decode
+        if kind == "train":
+            mf = 6 * n_act * seq * batch / chips
+        elif kind == "prefill":
+            mf = 2 * n_act * seq * batch / chips
+        else:
+            mf = 2 * n_act * batch / chips
+        hlo_f = t["flops_per_chip"]
+        rows.append({
+            "arch": rec["arch"], "cell": rec["cell"],
+            "mesh": "x".join(map(str, rec["mesh"])),
+            "t_compute_ms": round(t["t_compute"] * 1e3, 3),
+            "t_memory_ms": round(t["t_memory"] * 1e3, 3),
+            "t_collective_ms": round(t["t_collective"] * 1e3, 3),
+            "bottleneck": t["bottleneck"][2:],
+            "roofline_frac": round(t["roofline_fraction"], 3),
+            "model_flops_ratio": round(mf / hlo_f, 3) if hlo_f else 0.0,
+            "status": "OK",
+        })
+    return rows
+
+
+def main():
+    rows = table("*pod1.json")
+    print_csv("roofline_pod1", rows)
+    rows2 = table("*pod2.json")
+    if rows2:
+        print_csv("roofline_pod2", rows2)
+    save_result("roofline_table", {"pod1": rows, "pod2": rows2})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 2e-4] [--quick]
+
+Figures 5–10 of the paper run on scaled FROSTT-profile tensors with the
+paper's own §5.5 per-device timing methodology (see benchmarks/common.py).
+The roofline table aggregates the 512-device dry-run artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=2e-4,
+                    help="linear scale factor vs the paper's tensors")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller tensors, fewer devices")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure names (fig5..fig10,roofline)")
+    args = ap.parse_args()
+
+    scale = 5e-5 if args.quick else args.scale
+    m = 2 if args.quick else 4
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import cp_figures as cf
+
+    def want(name):
+        return only is None or name in only
+
+    if want("fig5"):
+        cf.fig5_total_time(scale=scale, m=m)
+    if want("fig6"):
+        cf.fig6_partitioning(scale=scale, m=m)
+    if want("fig7"):
+        cf.fig7_breakdown(scale=scale, m=m)
+    if want("fig8"):
+        cf.fig8_balance(scale=scale, m=m)
+    if want("fig9"):
+        cf.fig9_scaling(scale=scale,
+                        devices=(1, 2) if args.quick else (1, 2, 4, 8))
+    if want("fig10"):
+        cf.fig10_preprocessing(scale=scale, m=m)
+    if want("roofline"):
+        from benchmarks import roofline_table
+        roofline_table.main()
+
+
+if __name__ == "__main__":
+    main()

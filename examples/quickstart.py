@@ -1,0 +1,38 @@
+"""Quickstart: decompose a sparse tensor with AMPED-distributed CP-ALS.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Uses every layer of the public API: synthetic tensor → partitioning plan →
+distributed MTTKRP → ALS sweeps → factors + fit.
+"""
+import numpy as np
+
+from repro.core.coo import random_sparse
+from repro.core.decompose import cp_decompose
+
+def main():
+    # a skewed 3-mode tensor (Twitch-like hot indices)
+    tensor = random_sparse((2000, 800, 400), 200_000, seed=0,
+                           distribution="zipf", zipf_a=1.3)
+    print(f"tensor: shape={tensor.shape} nnz={tensor.nnz}")
+
+    result = cp_decompose(
+        tensor,
+        rank=16,
+        strategy="amped_cdf",    # the paper's output-mode sharding
+        iters=5,
+        ring=True,               # Algorithm-3 ring exchange
+        verbose=True,
+    )
+    print(f"\nfits per sweep: {[round(f, 4) for f in result.fits]}")
+    print(f"factor shapes: {[f.shape for f in result.factors]}")
+    print(f"lambda[:5] = {np.round(result.lam[:5], 3)}")
+    # balance stats the partitioner achieved (paper §5.5)
+    for mode, part in enumerate(result.plan.modes):
+        st = part.balance_stats()
+        print(f"mode {mode}: r={part.r} nnz max/min = "
+              f"{st['nnz_max']}/{st['nnz_min']}")
+
+
+if __name__ == "__main__":
+    main()

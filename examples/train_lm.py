@@ -1,0 +1,68 @@
+"""Train a small LM with the full training substrate (any assigned arch's
+smoke config): AdamW + cosine schedule, grad clip, microbatching,
+checkpointing with restart, deterministic data.
+
+    PYTHONPATH=src python examples/train_lm.py --arch granite_8b --steps 30
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.transformer import Model
+from repro.training import optimizer as opt_mod
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import SyntheticLM
+from repro.training.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_8b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, "smoke")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.2f}M params")
+
+    opt_cfg = opt_mod.AdamWConfig(lr=args.lr, warmup=5,
+                                  total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, opt_cfg,
+                                      microbatches=args.microbatches))
+    opt_state = opt_mod.adamw_init(params)
+    data = SyntheticLM(vocab=cfg.vocab, batch=args.batch, seq=args.seq)
+
+    start = 0
+    mgr = CheckpointManager(args.ckpt) if args.ckpt else None
+    if mgr is not None:
+        restored = mgr.restore_latest()
+        if restored:
+            payload, start = restored
+            params = jax.tree.map(jnp.asarray, payload["params"])
+            opt_state = jax.tree.map(jnp.asarray, payload["opt"])
+            print(f"resumed from step {start}")
+
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+        if mgr is not None and (step + 1) % 10 == 0:
+            mgr.save(step + 1, {"params": jax.tree.map(np.asarray, params),
+                                "opt": jax.tree.map(np.asarray, opt_state)})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""The paper's own experimental configuration (§5.1).
+
+Datasets: the four public billion-scale tensors (Table 3) — profiles in
+repro.sparse.io.DATASET_PROFILES. Rank R=32, threadblock P(θ)=32 (our
+kernel block_p defaults scale this up for MXU alignment), 4 devices on one
+node. ``paper_setup()`` returns the decomposition kwargs that reproduce the
+paper's configuration at a given scale on this container.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.sparse.io import DATASET_PROFILES
+
+RANK = 32
+PAPER_DEVICES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperRun:
+    profile: str
+    rank: int = RANK
+    num_devices: int = PAPER_DEVICES
+    strategy: str = "amped_cdf"
+    replication: int | None = 1      # paper scheme: no intra-group merge
+    ring: bool = True                # Algorithm-3 ring exchange
+    use_kernel: bool = False         # EC kernel (True = Pallas path)
+
+
+def paper_setup(profile: str = "amazon", **overrides) -> PaperRun:
+    assert profile in DATASET_PROFILES, profile
+    return dataclasses.replace(PaperRun(profile=profile), **overrides)
+
+
+def optimized_setup(profile: str = "amazon", **overrides) -> PaperRun:
+    """Beyond-paper: auto hierarchical replication + Pallas EC kernel."""
+    return dataclasses.replace(
+        PaperRun(profile=profile, replication=None, use_kernel=True),
+        **overrides)

@@ -1,0 +1,115 @@
+"""CP-ALS on top of distributed MTTKRP (paper Algorithm 1 + §2.1.4).
+
+One ALS sweep updates every mode in sequence:
+    M_d   = MTTKRP(X_(d), {F_w}_{w≠d})          (distributed, the paper's core)
+    V_d   = ⊛_{w≠d} (F_wᵀ F_w)                  (R×R Hadamard of grams)
+    F_d   = M_d V_d⁺,  λ = colnorms(F_d),  F_d /= λ
+with the fit computed from the standard norm identity (no residual tensor is
+ever materialised):
+    ||X̂||² = λᵀ (⊛_w G_w) λ,   ⟨X, X̂⟩ = Σ (M_last ⊛ F_last) λ
+Grams are cached across modes and only the updated mode's gram is recomputed
+(beyond-paper: removes (N−1)/N of gram FLOPs; see EXPERIMENTS.md §Perf).
+
+Factor matrices live in the padded ownership layout of their mode (see
+core/partition.py); padding rows are zero and stay zero through sweeps
+(MTTKRP writes zeros there; the solve is row-wise).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import mttkrp as dmttkrp
+from repro.core.partition import CPPlan
+
+__all__ = ["ALSState", "init_factors", "make_mode_update", "als_sweep",
+           "fit_from_stats", "unpad_factors"]
+
+
+@dataclasses.dataclass
+class ALSState:
+    factors: list[jax.Array]       # per mode, padded layout, replicated
+    lam: jax.Array                 # (R,) column scales
+    grams: list[jax.Array]         # per mode, (R, R) = F_wᵀ F_w
+    sweep: int = 0
+    fits: list[float] = dataclasses.field(default_factory=list)
+
+
+def init_factors(plan: CPPlan, rank: int, seed: int = 0) -> list[jax.Array]:
+    """Random factors in padded layout; padding rows exactly zero."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for w in range(plan.nmodes):
+        rows = plan.modes[w].padded_rows
+        f = np.zeros((rows, rank), np.float32)
+        g2p = plan.global_to_padded[w]
+        f[g2p] = rng.uniform(0.1, 1.0, size=(plan.shape[w], rank)).astype(np.float32)
+        out.append(jnp.asarray(f))
+    return out
+
+
+def _pinv_psd(v: jax.Array, rcond: float = 1e-8) -> jax.Array:
+    """Pseudo-inverse of a symmetric PSD R×R matrix via eigh (stable, tiny)."""
+    w, u = jnp.linalg.eigh(v)
+    w_inv = jnp.where(w > rcond * jnp.max(jnp.abs(w)), 1.0 / w, 0.0)
+    return (u * w_inv[None, :]) @ u.T
+
+
+def make_mode_update(plan: CPPlan, mode: int, mesh: Mesh, **mttkrp_kw) -> Callable:
+    """Jit-able: (dev_arrays, factors, grams) -> (F_d, G_d, M_d, lam)."""
+    mfn = dmttkrp.make_mttkrp_fn(plan.modes[mode], mesh, **mttkrp_kw)
+    n = plan.nmodes
+
+    def update(dev, factors: Sequence[jax.Array], grams: Sequence[jax.Array]):
+        m = mfn(dev, list(factors))                       # (padded_d, R)
+        v = functools.reduce(
+            lambda a, b: a * b,
+            [grams[w] for w in range(n) if w != mode])     # (R, R)
+        f_new = m @ _pinv_psd(v)
+        lam = jnp.linalg.norm(f_new, axis=0)
+        lam = jnp.where(lam > 0, lam, 1.0)
+        f_new = f_new / lam[None, :]
+        g_new = f_new.T @ f_new
+        return f_new, g_new, m, lam
+
+    return update
+
+
+def fit_from_stats(norm_x: float, m_last, f_last, lam, grams) -> jax.Array:
+    """fit = 1 - ||X - X̂||_F / ||X||_F via the norm identity."""
+    inner = jnp.sum(jnp.sum(m_last * f_last, axis=0) * lam)
+    gall = functools.reduce(lambda a, b: a * b, grams)
+    model_sq = lam @ gall @ lam
+    resid_sq = jnp.maximum(norm_x ** 2 - 2.0 * inner + model_sq, 0.0)
+    return 1.0 - jnp.sqrt(resid_sq) / norm_x
+
+
+def als_sweep(plan: CPPlan, mesh: Mesh, dev_arrays: Sequence, state: ALSState,
+              updates: Sequence[Callable] | None = None,
+              **mttkrp_kw) -> ALSState:
+    """One full sweep over all modes (Algorithm 1). ``updates`` may be a
+    pre-jitted list from :func:`make_mode_update` (one per mode)."""
+    n = plan.nmodes
+    if updates is None:
+        updates = [make_mode_update(plan, d, mesh, **mttkrp_kw) for d in range(n)]
+    factors, grams = list(state.factors), list(state.grams)
+    m_last = f_last = lam = None
+    for d in range(n):
+        f_d, g_d, m_d, lam = updates[d](dev_arrays[d], factors, grams)
+        factors[d], grams[d] = f_d, g_d
+        m_last, f_last = m_d, f_d
+    fit = float(fit_from_stats(plan.norm, m_last, f_last, lam, grams))
+    return ALSState(factors=factors, lam=lam, grams=grams,
+                    sweep=state.sweep + 1, fits=state.fits + [fit])
+
+
+def unpad_factors(plan: CPPlan, factors: Sequence[jax.Array]) -> list[np.ndarray]:
+    """Padded ownership layout → global row order (I_w, R)."""
+    return [np.asarray(f)[plan.global_to_padded[w]]
+            for w, f in enumerate(factors)]

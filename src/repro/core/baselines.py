@@ -1,0 +1,72 @@
+"""Baselines the paper compares against (§5.1.4, Figures 5–6).
+
+* ``blco_like_streaming`` — BLCO's out-of-memory model: the whole tensor
+  lives in host memory and is streamed chunk-by-chunk through a SINGLE
+  device, accumulating into the full output factor. (We reproduce the
+  *algorithmic structure* — single device, host↔device streaming per chunk —
+  not BLCO's linearized format.)
+
+* ``equal_nnz`` partitioning — the Fig. 6 baseline — is not here: it is the
+  ``strategy="equal_nnz"`` (replication r=m) path of the main implementation,
+  with the paper's host-CPU merge replaced by an on-device reduce-scatter
+  (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coo import SparseTensor
+from repro.kernels.ref import ec_rows_ref
+
+__all__ = ["blco_like_streaming", "StreamTimes"]
+
+
+def blco_like_streaming(
+    t: SparseTensor,
+    factors: Sequence[jax.Array],   # global layout (I_w, R)
+    mode: int,
+    *,
+    chunk: int = 1 << 16,
+    device=None,
+) -> tuple[jax.Array, dict]:
+    """Single-device MTTKRP with host→device streaming. Returns
+    (output factor (I_mode, R), timing dict)."""
+    device = device or jax.devices()[0]
+    n = t.nmodes
+    rank = factors[0].shape[1]
+    rows_out = t.shape[mode]
+
+    srt = t.sorted_by_mode(mode)
+    nnz = srt.nnz
+    nchunks = max(1, -(-nnz // chunk))
+
+    @jax.jit
+    def consume(out, idx, val, rows):
+        gathered = [factors[w][idx[:, w]] for w in range(n) if w != mode]
+        return out + ec_rows_ref(val, gathered, rows, rows_out)
+
+    out = jnp.zeros((rows_out, rank), jnp.float32)
+    h2d_time = 0.0
+    ec_time = 0.0
+    for c in range(nchunks):
+        lo, hi = c * chunk, min((c + 1) * chunk, nnz)
+        pad = chunk - (hi - lo)
+        idx = np.pad(srt.indices[lo:hi], ((0, pad), (0, 0)))
+        val = np.pad(srt.values[lo:hi], (0, pad))
+        rows = idx[:, mode]
+        t0 = time.perf_counter()
+        idx_d = jax.device_put(idx, device)
+        val_d = jax.device_put(val, device)
+        rows_d = jax.device_put(rows.astype(np.int32), device)
+        jax.block_until_ready((idx_d, val_d, rows_d))
+        t1 = time.perf_counter()
+        out = consume(out, idx_d, val_d, rows_d)
+        out.block_until_ready()
+        h2d_time += t1 - t0
+        ec_time += time.perf_counter() - t1
+    return out, {"h2d_s": h2d_time, "ec_s": ec_time, "chunks": nchunks}

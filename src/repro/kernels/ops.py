@@ -1,0 +1,57 @@
+"""Jit-ready wrappers around the MTTKRP EC kernel.
+
+``mttkrp_local`` is the single-device EC used inside shard_map by
+core/mttkrp.py: gather input factor rows (XLA gather), then run either the
+Pallas kernel (TPU target; ``interpret=True`` on CPU) or the pure-jnp
+segment-sum path.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.mttkrp_pallas import ec_blocked
+
+__all__ = ["mttkrp_local", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mttkrp_local(
+    indices: jax.Array,        # (nnz, N) int32, padded layouts
+    values: jax.Array,         # (nnz,)
+    local_rows: jax.Array,     # (nnz,) int32 in [0, num_rows)
+    block_to_tile: jax.Array,  # (nblocks,) int32
+    factors: Sequence[jax.Array],
+    *,
+    mode: int,
+    num_rows: int,
+    tile: int,
+    block_p: int,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    tile_mask: jax.Array | None = None,  # (num_rows/tile,) 1=visited
+) -> jax.Array:
+    """Local (per-device) EC over this device's shard. Returns (num_rows, R) f32."""
+    if not use_kernel:
+        return _ref.mttkrp_local_ref(indices, values, local_rows, factors,
+                                     mode, num_rows)
+    if interpret is None:
+        interpret = default_interpret()
+    gathered = [factors[w][indices[:, w]]
+                for w in range(len(factors)) if w != mode]
+    row_in_tile = (local_rows % tile).astype(jnp.int32)
+    out = ec_blocked(
+        values, row_in_tile, block_to_tile, gathered,
+        num_rows=num_rows, tile=tile, block_p=block_p, interpret=interpret)
+    if tile_mask is not None:
+        # Tiles never visited by a block are uninitialised VMEM (possibly
+        # NaN) — select, don't multiply (NaN * 0 == NaN).
+        mask = jnp.repeat(tile_mask > 0, tile)[:, None]
+        out = jnp.where(mask, out, 0.0)
+    return out

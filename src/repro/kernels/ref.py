@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the MTTKRP elementwise computation (EC).
+
+These define the semantics the Pallas kernels must match:
+  out[row] += val * prod_{w != mode} F_w[idx_w, :]
+with rows already local (padded ownership layout, see core/partition.py).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ec_rows_ref", "mttkrp_local_ref", "mttkrp_dense_ref"]
+
+
+def ec_rows_ref(values, gathered_rows: Sequence[jax.Array], local_rows, num_rows: int):
+    """EC from already-gathered input rows.
+
+    values: (nnz,); gathered_rows: list of (nnz, R); local_rows: (nnz,) int32.
+    Returns (num_rows, R) f32 accumulation (padding entries have value 0 →
+    exact no-ops).
+    """
+    e = values.astype(jnp.float32)[:, None]
+    for rows in gathered_rows:
+        e = e * rows.astype(jnp.float32)
+    return jax.ops.segment_sum(e, local_rows, num_segments=num_rows)
+
+
+def mttkrp_local_ref(indices, values, local_rows, factors: Sequence[jax.Array],
+                     mode: int, num_rows: int):
+    """Gather + EC oracle. ``indices``: (nnz, N) in padded layouts;
+    ``factors[w]``: (padded_w, R)."""
+    gathered = [factors[w][indices[:, w]] for w in range(len(factors)) if w != mode]
+    return ec_rows_ref(values, gathered, local_rows, num_rows)
+
+
+def mttkrp_dense_ref(dense, factors: Sequence[jax.Array], mode: int):
+    """Dense MTTKRP oracle (global layout): X_(d) (B ⊙ C ...) via einsum.
+    Supports 3..5 modes."""
+    n = dense.ndim
+    letters = "ijklm"[:n]
+    out_l = letters[mode]
+    terms = [dense]
+    spec_in = [letters]
+    for w in range(n):
+        if w == mode:
+            continue
+        terms.append(factors[w])
+        spec_in.append(letters[w] + "r")
+    spec = ",".join(spec_in) + "->" + out_l + "r"
+    return jnp.einsum(spec, *terms)

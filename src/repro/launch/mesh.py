@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; tests and benches see the real (single) device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_cp_production_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16)=("data","model") single pod; (2,16,16)=("pod","data","model")
+    for 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_cp_production_mesh(*, multi_pod: bool = False, replication: int = 16):
+    """CP-ALS view of the same chips: ("group","sub") with |sub| =
+    ``replication`` (the intra-group merge axis; 1 → pure paper scheme).
+    Total devices match the production mesh (256 / 512)."""
+    total = 512 if multi_pod else 256
+    assert total % replication == 0
+    return jax.make_mesh(
+        (total // replication, replication), ("group", "sub"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

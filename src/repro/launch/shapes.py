@@ -1,0 +1,262 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs per arch.
+
+Cells (assignment):
+  train_4k     seq=4096   global_batch=256   → train_step
+  prefill_32k  seq=32768  global_batch=32    → serve prefill
+  decode_32k   seq=32768  global_batch=128   → serve decode (1 new token,
+                                               KV cache of seq_len)
+  long_500k    seq=524288 global_batch=1     → decode, sub-quadratic archs
+                                               only (rwkv6, jamba) with
+                                               sequence-parallel KV
+
+``input_specs`` returns everything the dry-run needs: the function to lower,
+argument ShapeDtypeStructs, and in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import sharding as shard_rules
+from repro.models.transformer import Model, ModelConfig
+from repro.serving import serve as serve_mod
+from repro.training import optimizer as opt_mod
+from repro.training.train_step import make_train_step
+
+__all__ = ["SHAPE_CELLS", "input_specs", "supports_cell", "CellSpec"]
+
+SHAPE_CELLS = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode", seq_shard=True),
+}
+
+# archs whose every layer is sub-quadratic-capable (SSM / hybrid with
+# seq-parallel attention decode) — the only ones long_500k runs on.
+LONG_OK = {"rwkv6_7b", "jamba15_large"}
+
+ENCODER_LEN = 1500      # whisper stub frames
+IMAGE_TOKENS = 1600     # llama-vision stub patch embeddings
+
+
+def supports_cell(arch: str, cell: str) -> bool:
+    if cell == "long_500k":
+        return arch in LONG_OK
+    return True
+
+
+@dataclasses.dataclass
+class CellSpec:
+    fn: Callable              # function to jit/lower
+    args: tuple               # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict                # bookkeeping for the roofline
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _params_shape(model: Model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def _extra_shapes(cfg: ModelConfig, batch: int):
+    extra = {}
+    if cfg.encoder is not None:
+        extra["frames"] = _struct((batch, ENCODER_LEN, cfg.d_model),
+                                  cfg.np_dtype)
+    elif any(s.mixer == "cross_attn" for s in cfg.pattern):
+        extra["images"] = _struct((batch, IMAGE_TOKENS, cfg.d_model),
+                                  cfg.np_dtype)
+    return extra
+
+
+def _extra_specs(extra, dp):
+    return {k: P(dp, None, None) for k in extra}
+
+
+def param_count(params_shape) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params_shape))
+
+
+def active_param_count(cfg: ModelConfig, params_shape) -> int:
+    """MoE-aware active parameters (routed experts scaled by topk/E)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        n = int(np.prod(leaf.shape))
+        names = [p.key for p in path if hasattr(p, "key")]
+        if cfg.n_experts and names and names[-1] in ("w1", "w2", "w3") \
+                and len(leaf.shape) >= 3:
+            n = int(n * cfg.topk / cfg.n_experts)
+        total += n
+    return total
+
+
+def _with_moe_hints(cfg, mesh: Mesh, dp, fn):
+    """Install shard_map mesh hints for the a2a MoE dispatch path."""
+    if cfg.moe_dispatch != "a2a" or "model" not in mesh.axis_names:
+        return fn
+    if cfg.n_experts == 0 or cfg.n_experts % mesh.shape["model"]:
+        return fn
+    from repro.models import shardctx as _sc
+    ep_size = mesh.shape["model"]
+    dp_size = 1
+    for a in (dp or ()):
+        dp_size *= mesh.shape[a]
+    axes = {"mesh": mesh, "dp": dp, "ep": "model",
+            "dp_size": dp_size, "ep_size": ep_size}
+    from jax.sharding import PartitionSpec as _P
+    moe_out = _P(dp, None, None)
+
+    def wrapped(*args):
+        with _sc.hints(moe_axes=axes, moe_out=moe_out):
+            return fn(*args)
+
+    return wrapped
+
+
+def input_specs(arch: str, cell: str, mesh: Mesh, *,
+                remat: str | None = None,
+                microbatches: int = 1,
+                variant: str = "full",
+                seq: int | None = None,
+                batch: int | None = None,
+                kv_layout: str = "auto",
+                moe_dispatch: str | None = None) -> CellSpec:
+    """``variant='smoke'`` + seq/batch overrides let tests run the identical
+    lowering path at CPU scale."""
+    info = SHAPE_CELLS[cell]
+    cfg = get_config(arch, variant)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if moe_dispatch is not None:
+        cfg = dataclasses.replace(cfg, moe_dispatch=moe_dispatch)
+    model = Model(cfg)
+    kind = info["kind"]
+    seq = seq or info["seq"]
+    batch = batch or info["batch"]
+    dp = shard_rules.dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if batch % max(dp_size, 1):
+        dp = None            # tiny batches (long_500k b=1) stay replicated
+
+    params_shape = _params_shape(model)
+    p_specs = shard_rules.param_specs(params_shape)
+    p_specs = shard_rules.sanitize_specs(p_specs, params_shape, mesh)
+    p_shard = shard_rules.make_shardings(mesh, p_specs)
+
+    chips = 1
+    for a in mesh.axis_names:
+        chips *= mesh.shape[a]
+    cache_shape_probe = jax.eval_shape(
+        functools.partial(model.empty_cache, batch, seq))
+    kv_bytes = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree.leaves(cache_shape_probe))
+    meta = dict(arch=arch, cell=cell, seq=seq, batch=batch, kind=kind,
+                params=param_count(params_shape),
+                active_params=active_param_count(cfg, params_shape),
+                chips=chips, d_model=cfg.d_model, n_layers=cfg.n_layers,
+                kv_bytes=kv_bytes, remat=cfg.remat not in (None, "none"))
+
+    if kind == "train":
+        opt_shape = jax.eval_shape(opt_mod.adamw_init, params_shape)
+        o_specs = opt_mod.zero1_specs(p_specs, params_shape, mesh)
+        o_shard = shard_rules.make_shardings(mesh, o_specs)
+        extra = _extra_shapes(cfg, batch)
+        batch_shapes = {"tokens": _struct((batch, seq), jnp.int32),
+                        "targets": _struct((batch, seq), jnp.int32), **extra}
+        batch_specs = {"tokens": P(dp), "targets": P(dp),
+                       **_extra_specs(extra, dp)}
+        b_shard = shard_rules.make_shardings(mesh, batch_specs)
+        opt_cfg = opt_mod.AdamWConfig()
+        base_step = make_train_step(model, opt_cfg, microbatches=microbatches)
+        step_fn = _with_moe_hints(cfg, mesh, dp, base_step)
+        return CellSpec(
+            fn=step_fn,
+            args=(params_shape, opt_shape, batch_shapes),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            meta=meta,
+        )
+
+    if kind == "prefill":
+        extra = _extra_shapes(cfg, batch)
+        tokens = _struct((batch, seq), jnp.int32)
+
+        def prefill_base(params, tokens, extra_in):
+            return model.prefill(params, tokens, cache_len=seq,
+                                 extra=extra_in or None)
+
+        prefill_fn = _with_moe_hints(cfg, mesh, dp, prefill_base)
+        return CellSpec(
+            fn=prefill_fn,
+            args=(params_shape, tokens, extra),
+            in_shardings=(p_shard,
+                          NamedSharding(mesh, P(dp, None)),
+                          shard_rules.make_shardings(mesh, _extra_specs(extra, dp))),
+            out_shardings=None,
+            meta=meta,
+        )
+
+    # decode
+    seq_shard = bool(info.get("seq_shard"))
+    cache_shape = cache_shape_probe
+    c_specs = serve_mod.cache_specs(model, mesh, batch=batch,
+                                    seq_shard=seq_shard, kv_layout=kv_layout)
+    extra = _extra_shapes(cfg, batch)
+    cache = {"layers": cache_shape, "pos": _struct((), jnp.int32)}
+    cache_spec_tree = {"layers": c_specs["layers"], "pos": c_specs["pos"]}
+    if extra:
+        # cross-attn memory rides in the cache (computed at prefill time)
+        mem_key = "frames" if "frames" in extra else "images"
+        mem = extra[mem_key]
+        cache["xkv"] = {"x": mem, "enc_out": mem}
+        cache_spec_tree["xkv"] = {"x": P(dp, None, None),
+                                  "enc_out": P(dp, None, None)}
+    else:
+        cache["xkv"] = None
+        cache_spec_tree["xkv"] = None
+    tokens = _struct((batch, 1), jnp.int32)
+
+    from repro.models import shardctx
+    dp_b = dp if (dp and batch % dp_size == 0 and batch > 1
+                  and not seq_shard) else None
+    q_hint = P(dp_b, None, None, None)
+    tp = "model" if "model" in mesh.axis_names else None
+    heads_ok = tp is not None and cfg.n_kv_heads % mesh.shape.get(tp, 1) == 0
+    if seq_shard:
+        s_axis = dp
+    elif tp and not heads_ok and kv_layout == "auto":
+        s_axis = tp
+    else:
+        s_axis = None
+    scores_hint = P(dp_b, None, None, s_axis) if s_axis else None
+
+    def decode_base(params, tokens, cache_in):
+        with shardctx.hints(decode_q=q_hint, decode_scores=scores_hint):
+            return model.decode_step(params, tokens, cache_in)
+
+    decode_fn = _with_moe_hints(cfg, mesh, dp, decode_base)
+
+    c_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        cache_spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+    return CellSpec(
+        fn=decode_fn,
+        args=(params_shape, tokens, cache),
+        in_shardings=(p_shard, NamedSharding(mesh, P(dp, None)), c_shard),
+        out_shardings=None,
+        meta={**meta, "seq_shard": seq_shard, "kv_layout": kv_layout},
+    )

@@ -1,0 +1,268 @@
+"""Attention variants: GQA (optionally sliding-window / soft-capped), MLA,
+cross-attention; chunked (flash-style) prefill and single-token decode.
+
+Memory discipline: prefill never materialises an S×S score matrix — queries
+are processed in chunks with an online-softmax scan over KV chunks
+(``block_skip`` drops fully-masked KV blocks from the compiled FLOPs — a
+§Perf iteration, see EXPERIMENTS.md). Sliding-window attention slices a
+static (window + chunk) KV span per query chunk, so local layers are linear
+in S.
+
+Shapes: q (B,S,H,hd), k/v (B,S,KVH,hd) with H % KVH == 0 (GQA).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shardctx
+from repro.models.common import softcap
+
+__all__ = ["attention_prefill", "attention_decode", "mla_prefill",
+           "mla_decode_absorbed"]
+
+NEG_INF = -2.0 ** 30
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, kvh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kvh, n_rep, hd)
+                            ).reshape(b, s, kvh * n_rep, hd)
+
+
+def _chunk_attend(qc, k, v, mask, scale, cap):
+    """One (q-chunk × kv-span) attention with explicit mask.
+
+    qc: (B,C,H,hd); k,v: (B,T,H,hd); mask: (C,T) or (B,C,T) bool (True=keep).
+    Returns (out (B,C,H,hd), m (B,H,C), l (B,H,C)) — unnormalised (flash
+    accumulator convention)."""
+    s = jnp.einsum("bchd,bthd->bhct", qc.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = softcap(s, cap)
+    if mask.ndim == 2:
+        mask = mask[None, None]
+    else:
+        mask = mask[:, None]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                   # (B,H,C)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bhct,bthd->bchd", p, v.astype(jnp.float32))
+    return out, m, l
+
+
+def attention_prefill(q, k, v, *, causal: bool = True, window: int | None = None,
+                      cap: float | None = None, chunk: int = 512,
+                      block_skip: bool = True):
+    """Chunked attention over full sequences (train / prefill).
+
+    window: sliding-window span (local attention; causal implied).
+    block_skip: skip fully-masked KV blocks (compiled-FLOP reduction ~2× for
+    causal attention; exact — skipped blocks are provably all-masked).
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    hdv = v.shape[3]          # may differ from hd (MLA: nope+rope vs v dim)
+    n_rep = h // kvh
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    scale = 1.0 / math.sqrt(hd)
+    c = min(chunk, s)
+    if s % c:
+        c = math.gcd(s, c)
+    nq = s // c
+
+    if window is not None:
+        # local attention: q chunk i sees kv [i*c - (window-1), i*c + c)
+        span = window - 1 + c
+        pad = window - 1
+        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        qpos = jnp.arange(c)
+        kpos = jnp.arange(span) - pad
+        base_mask = (kpos[None, :] <= qpos[:, None]) & \
+                    (kpos[None, :] > qpos[:, None] - window)    # (c, span)
+
+        def per_chunk(i):
+            qc = jax.lax.dynamic_slice_in_dim(q, i * c, c, axis=1)
+            kc = jax.lax.dynamic_slice_in_dim(kp, i * c, span, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(vp, i * c, span, axis=1)
+            # positions before 0 are padding → masked by kpos >= -pad+i*c>=0
+            valid = (kpos[None, :] + i * c) >= 0
+            out, m, l = _chunk_attend(qc, kc, vc, base_mask & valid, scale, cap)
+            return out / jnp.maximum(l, 1e-37).transpose(0, 2, 1)[..., None]
+
+        outs = jax.lax.map(per_chunk, jnp.arange(nq))          # (nq,B,c,H,hdv)
+        return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hdv).astype(q.dtype)
+
+    # global attention
+    nk = s // c
+    qpos = jnp.arange(c)
+    kpos = jnp.arange(c)
+
+    def merge(acc, m, l, o, m2, l2):
+        m_new = jnp.maximum(m, m2)
+        alpha = jnp.exp(m - m_new)
+        beta = jnp.exp(m2 - m_new)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] \
+            + o * beta.transpose(0, 2, 1)[..., None]
+        return acc, m_new, l * alpha + l2 * beta
+
+    if causal and block_skip:
+        # Static causal pair list: only lower-triangular (qi, kj) blocks are
+        # ever computed — ~2× fewer compiled FLOPs than masking all blocks,
+        # and fully differentiable (scan, not dynamic fori_loop).
+        pairs = [(i, j) for i in range(nq) for j in range(i + 1)]
+        qi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        kj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+        def pair_step(carry, ij):
+            acc, m, l = carry
+            i, j = ij
+            qc = jax.lax.dynamic_slice_in_dim(q, i * c, c, axis=1)
+            kc = jax.lax.dynamic_slice_in_dim(k, j * c, c, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, j * c, c, axis=1)
+            mask = (qpos[:, None] + i * c) >= (kpos[None, :] + j * c)
+            o, m2, l2 = _chunk_attend(qc, kc, vc, mask, scale, cap)
+            a_i = jax.lax.dynamic_slice_in_dim(acc, i, 1, axis=0)[0]
+            m_i = jax.lax.dynamic_slice_in_dim(m, i, 1, axis=0)[0]
+            l_i = jax.lax.dynamic_slice_in_dim(l, i, 1, axis=0)[0]
+            a_i, m_i, l_i = merge(a_i, m_i, l_i, o, m2, l2)
+            acc = jax.lax.dynamic_update_slice_in_dim(acc, a_i[None], i, 0)
+            m = jax.lax.dynamic_update_slice_in_dim(m, m_i[None], i, 0)
+            l = jax.lax.dynamic_update_slice_in_dim(l, l_i[None], i, 0)
+            return (acc, m, l), None
+
+        acc0 = jnp.zeros((nq, b, c, h, hdv), jnp.float32)
+        m0 = jnp.full((nq, b, h, c), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((nq, b, h, c), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(pair_step, (acc0, m0, l0), (qi, kj))
+        outs = acc / jnp.maximum(l, 1e-37).transpose(0, 1, 3, 2)[..., None]
+        return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hdv).astype(q.dtype)
+
+    def per_qchunk(i):
+        qc = jax.lax.dynamic_slice_in_dim(q, i * c, c, axis=1)
+
+        def kv_step(carry, j):
+            acc, m, l = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, j * c, c, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, j * c, c, axis=1)
+            if causal:
+                mask = (qpos[:, None] + i * c) >= (kpos[None, :] + j * c)
+            else:
+                mask = jnp.ones((c, c), bool)
+            o, m2, l2 = _chunk_attend(qc, kc, vc, mask, scale, cap)
+            acc, m, l = merge(acc, m, l, o, m2, l2)
+            return (acc, m, l), None
+
+        acc0 = jnp.zeros((b, c, h, hdv), jnp.float32)
+        m0 = jnp.full((b, h, c), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, c), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-37).transpose(0, 2, 1)[..., None]
+
+    outs = jax.lax.map(per_qchunk, jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hdv).astype(q.dtype)
+
+
+def cross_attention(q, k, v, *, cap=None, chunk: int = 512):
+    """Non-causal attention against a fixed memory (encoder / image tokens)."""
+    return _full_softmax(q, k, v, cap)
+
+
+def _full_softmax(q, k, v, cap):
+    h, kvh = q.shape[2], k.shape[2]
+    k, v = _repeat_kv(k, h // kvh), _repeat_kv(v, h // kvh)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bthd->bhqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = softcap(s, cap)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqt,bthd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, cur_len, *, window: int | None = None,
+                     cap: float | None = None):
+    """Single-token decode: q (B,1,H,hd); caches (B,S_max,KVH,hd).
+
+    cur_len: number of valid cache positions INCLUDING the newly written
+    token. Works with KV caches sharded along S (sequence-parallel decode):
+    the max/sum reductions become cross-device collectives under GSPMD.
+    """
+    b, smax, kvh, hd = k_cache.shape
+    h = q.shape[2]
+    # sequence-parallel decode: when the cache is S-sharded, q must be
+    # head-replicated or GSPMD re-shards the whole cache per step
+    q = shardctx.constrain(q, "decode_q")
+    k = _repeat_kv(k_cache, h // kvh)
+    v = _repeat_kv(v_cache, h // kvh)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqhd,bthd->bhqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale                # (B,H,1,S)
+    # keep scores sharded like the cache's S dim (stops backward propagation
+    # from the o-projection re-gathering the cache)
+    s = shardctx.constrain(s, "decode_scores")
+    s = softcap(s, cap)
+    pos = jnp.arange(smax)
+    mask = pos[None, None, None, :] < cur_len
+    if window is not None:
+        mask = mask & (pos[None, None, None, :] >= cur_len - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqt,bthd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV with decoupled RoPE dims.
+# ---------------------------------------------------------------------------
+
+def mla_prefill(q_nope, q_rope, c_kv, k_rope, w_uk, w_uv, *, causal=True,
+                chunk: int = 512):
+    """Naive (expanded) MLA for train/prefill.
+
+    q_nope (B,S,H,dn), q_rope (B,S,H,dr), c_kv (B,S,kv_lora),
+    k_rope (B,S,1,dr) shared across heads; w_uk (kv_lora,H,dn),
+    w_uv (kv_lora,H,dv)."""
+    k_nope = jnp.einsum("bsl,lhd->bshd", c_kv, w_uk)
+    v = jnp.einsum("bsl,lhd->bshd", c_kv, w_uv)
+    h = q_nope.shape[2]
+    k_rope_h = jnp.broadcast_to(k_rope, k_rope.shape[:2] + (h, k_rope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    return attention_prefill(q, k, v, causal=causal, chunk=chunk)
+
+
+def mla_decode_absorbed(q_nope, q_rope, ckv_cache, krope_cache, cur_len,
+                        w_uk, w_uv):
+    """Absorbed-matmul MLA decode: scores in compressed space — the cache
+    stays (S, kv_lora + dr) per token and is never expanded.
+
+    q_nope (B,1,H,dn), q_rope (B,1,H,dr); ckv_cache (B,S,kv_lora);
+    krope_cache (B,S,dr)."""
+    b, smax, lora = ckv_cache.shape
+    dn = q_nope.shape[-1]
+    q_nope = shardctx.constrain(q_nope, "decode_q")
+    q_rope = shardctx.constrain(q_rope, "decode_q")
+    scale = 1.0 / math.sqrt(dn + q_rope.shape[-1])
+    # absorb w_uk into q: q' = q_nope @ w_uk^T per head → compressed space
+    q_c = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32))
+    s = jnp.einsum("bqhl,bsl->bhqs", q_c, ckv_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                       krope_cache.astype(jnp.float32))
+    s = s * scale
+    s = shardctx.constrain(s, "decode_scores")
+    mask = jnp.arange(smax)[None, None, None, :] < cur_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhqs,bsl->bqhl", p, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bqhl,lhd->bqhd", o_c, w_uv.astype(jnp.float32))
+    return o.astype(q_nope.dtype)

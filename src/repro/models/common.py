@@ -1,0 +1,88 @@
+"""Shared model primitives: norms, rotary embeddings, init helpers.
+
+All parameters are plain pytrees (nested dicts of jax arrays); ``init_*``
+functions double as shape definitions — the dry-run gets parameter
+ShapeDtypeStructs via ``jax.eval_shape`` over them (no allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "layer_norm", "rope", "rope_at", "dense_init",
+           "Param", "softcap"]
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * s).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6, *, offset: float = 1.0):
+    """RMSNorm with gemma-style (1+scale) option (offset=1) or llama style
+    (offset=0 → plain scale)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (offset + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+def softcap(x, cap: float | None):
+    """tanh logit soft-capping (gemma2)."""
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def _rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_at(x, positions, theta: float = 10000.0):
+    """Rotary embedding at explicit positions.
+
+    x: (..., S, H, hd); positions: broadcastable to (..., S).
+    Rotates the first even half-pairs (GPT-NeoX convention: split halves).
+    """
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope(x, theta: float = 10000.0, offset=0):
+    """Rotary embedding for positions offset..offset+S-1. x: (B,S,H,hd)."""
+    s = x.shape[-3]
+    pos = jnp.arange(s) + offset
+    return rope_at(x, pos[None, :], theta)
+
+
+class Param:
+    """Small helper to build nested param dicts with split keys."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def take(self, n: int):
+        keys = jax.random.split(self._key, n + 1)
+        self._key = keys[0]
+        return keys[1:]

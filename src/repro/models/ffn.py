@@ -1,0 +1,286 @@
+"""Feed-forward blocks: dense MLP variants and Mixture-of-Experts.
+
+MoE dispatch has two interchangeable implementations (validated equal):
+
+* ``dispatch="scatter"`` — capacity-bucketed scatter/gather (GShard style):
+  tokens are scattered into an (E, cap, d) buffer, expert FFNs run as a
+  batched matmul over the expert dim (expert-parallel: E sharded over the
+  "model" axis), outputs gathered back with gate weights.
+
+* ``dispatch="sort"`` — the **AMPED transfer** (DESIGN.md §6/§7): token
+  copies are sorted by expert id — exactly the paper's "group nonzeros by
+  output index" — so each expert's tokens form a contiguous segment; the
+  buffer is built with one argsort + reshape instead of a scatter. On TPU
+  this removes the scatter op (lowered as a serialized dynamic-update loop
+  or a full-buffer one-hot matmul by XLA) in favour of sort + gather, the
+  same sorted-segment structure the MTTKRP kernel exploits.
+
+Both drop tokens over capacity (standard; capacity_factor configures).
+* ``dispatch="a2a"`` — **expert-parallel all-to-all** (the production path
+  at pod scale): inside ``shard_map``, each data shard sorts its token
+  copies by destination expert shard (AMPED's group-by-output-index, with
+  the expert shard as the output index), exchanges fixed-size buckets with
+  one ``lax.all_to_all`` over the EP axis, runs its local experts on what
+  it receives, and reverses the exchange. Traffic per layer drops from an
+  (E,cap,d) all-reduce (GSPMD's lowering of the scatter dispatch) to
+  2 × tokens×d — see EXPERIMENTS.md §Perf. Requires mesh hints
+  (models/shardctx.py); falls back to "sort" when absent.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import shardctx
+
+__all__ = ["mlp", "moe", "moe_ref_dense", "moe_a2a"]
+
+
+def _act(kind: str, x, gate=None):
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * x
+    if kind == "geglu":
+        return jax.nn.gelu(gate) * x
+    if kind == "squared_relu":
+        return jnp.square(jax.nn.relu(x))
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def mlp(x, p, kind: str = "swiglu"):
+    """x (..., d). p: {'w1','w2'} (+ 'w3' gate for *glu kinds)."""
+    if kind in ("swiglu", "geglu"):
+        h = _act(kind, x @ p["w1"], x @ p["w3"])
+    else:
+        h = _act(kind, x @ p["w1"])
+    return h @ p["w2"]
+
+
+def _topk_gates(logits, k: int):
+    """Softmax-after-topk router (deepseek/mixtral convention)."""
+    gates, idx = jax.lax.top_k(logits, k)            # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    return gates, idx
+
+
+def moe(x, p, *, topk: int, capacity_factor: float = 1.25,
+        dispatch: str = "sort", act: str = "swiglu"):
+    """MoE over flat tokens. x: (T, d). p: {'router' (d,E),
+    'w1','w3' (E,d,f), 'w2' (E,f,d)}. Returns (T, d), aux metrics."""
+    t, d = x.shape
+    e = p["router"].shape[1]
+    f = p["w1"].shape[2]
+    cap = max(1, -(-int(capacity_factor * t * topk) // e))  # ceil
+    cap = min(cap, t)
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    gates, eidx = _topk_gates(logits, topk)          # (T,k)
+
+    flat_e = eidx.reshape(-1)                        # (T*k,)
+    flat_g = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), topk)
+
+    if dispatch == "scatter":
+        # position of each copy within its expert via cumsum over one-hot
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)     # (T*k, E)
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        mypos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        keep = mypos < cap
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        buf = buf.at[flat_e, jnp.where(keep, mypos, cap - 1)].add(
+            jnp.where(keep, 1.0, 0.0)[:, None] * x[flat_tok])
+        src_tok = jnp.full((e, cap), -1, jnp.int32)  # only for combine path
+        y = _expert_ffn(buf, p, act)
+        out_copies = y[flat_e, jnp.where(keep, mypos, cap - 1)]
+        out_copies = jnp.where(keep[:, None], out_copies, 0.0)
+    elif dispatch == "sort":
+        # AMPED-style: sort copies by expert id → contiguous segments.
+        order = jnp.argsort(flat_e)                  # stable iota-tiebreak
+        e_sorted = flat_e[order]
+        tok_sorted = flat_tok[order]
+        # rank within segment = position - segment start
+        seg_start = jnp.searchsorted(e_sorted, jnp.arange(e))
+        rank = jnp.arange(t * topk) - seg_start[e_sorted]
+        keep_s = rank < cap
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        buf = buf.at[e_sorted, jnp.where(keep_s, rank, cap - 1)].add(
+            jnp.where(keep_s, 1.0, 0.0)[:, None] * x[tok_sorted])
+        y = _expert_ffn(buf, p, act)
+        copies_sorted = y[e_sorted, jnp.where(keep_s, rank, cap - 1)]
+        copies_sorted = jnp.where(keep_s[:, None], copies_sorted, 0.0)
+        inv = jnp.argsort(order)
+        out_copies = copies_sorted[inv]
+    else:
+        raise ValueError(dispatch)
+
+    out = jnp.zeros((t, d), jnp.float32).at[flat_tok].add(
+        out_copies.astype(jnp.float32) * flat_g[:, None])
+    aux = {"router_z": jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+           "load": jnp.bincount(flat_e, length=e) / (t * topk)}
+    return out.astype(x.dtype), aux
+
+
+def _expert_ffn(buf, p, act: str):
+    """buf (E, cap, d) → (E, cap, d), batched over experts (EP-shardable)."""
+    if act in ("swiglu", "geglu"):
+        h1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+        h3 = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+        h = _act(act, h1, h3)
+    else:
+        h = _act(act, jnp.einsum("ecd,edf->ecf", buf, p["w1"]))
+    return jnp.einsum("ecf,efd->ecd", h, p["w2"])
+
+
+def _bucket_scatter(values, bucket, rank, nbuckets, cap):
+    """Scatter rows into (nbuckets, cap+1, ...) buckets; overflow rows land
+    in the sacrificial slot ``cap`` (sliced off) so no valid slot is ever
+    corrupted by a collision. values: (N, ...) or (N,) int/float."""
+    slot = jnp.where(rank < cap, rank, cap)
+    shape = (nbuckets, cap + 1) + values.shape[1:]
+    buf = jnp.zeros(shape, values.dtype)
+    return buf.at[bucket, slot].add(values)[:, :cap]
+
+
+def _local_expert_ffn(xs, le, valid, w1, w2, w3, act, capacity_factor):
+    """Run local experts on received tokens. xs: (N, d); le: (N,) local
+    expert id; valid: (N,) bool. Returns (N, d) (invalid rows zero)."""
+    n, d = xs.shape
+    e_loc = w1.shape[0]
+    if e_loc == 1:
+        p1 = {"w1": w1[0], "w2": w2[0]}
+        if w3 is not None:
+            p1["w3"] = w3[0]
+        y = mlp(xs, p1, act)
+        return jnp.where(valid[:, None], y, 0.0)
+    # senders already padded by capacity_factor; balance headroom is baked
+    # into n = ep·s_b, so per-expert cap is just the balanced share
+    cap = min(n, max(1, -(-n // e_loc)))
+    le_eff = jnp.where(valid, le, e_loc)            # invalid → dummy bucket
+    order = jnp.argsort(le_eff)
+    le_s = le_eff[order]
+    seg_start = jnp.searchsorted(le_s, jnp.arange(e_loc + 1))
+    rank = jnp.arange(n) - seg_start[jnp.minimum(le_s, e_loc)]
+    ok = (le_s < e_loc) & (rank < cap)
+    buf = _bucket_scatter(jnp.where(ok[:, None], xs[order], 0.0),
+                          jnp.where(ok, le_s, e_loc - 1),
+                          jnp.where(ok, rank, cap), e_loc, cap)
+    p = {"w1": w1, "w2": w2}
+    if w3 is not None:
+        p["w3"] = w3
+    y = _expert_ffn(buf, p, act)
+    got = y[jnp.where(ok, le_s, 0), jnp.where(ok, rank, 0)]
+    got = jnp.where(ok[:, None], got, 0.0)
+    inv = jnp.argsort(order)
+    return got[inv]
+
+
+def moe_a2a(x, p, *, topk: int, capacity_factor: float, act: str,
+            dp_axes, ep_axis: str, mesh):
+    """Expert-parallel MoE via all_to_all (see module docstring).
+
+    x: (B, S, d) GLOBAL activations. Sharding at the shard_map boundary is
+    batch over ``dp_axes`` × **sequence over ``ep_axis``** (Megatron-style
+    sequence parallelism): slicing S locally is layout-compatible with the
+    attention blocks around the FFN, so entering/leaving the region costs a
+    single S-gather instead of a full token reshuffle (flattening B·S over
+    all devices forced GSPMD to re-gather attention tensors inside the layer
+    loop — ~400 MB × layers; see EXPERIMENTS §Perf iteration 5→6).
+    Weights in ``p`` are globally shaped; shard_map slices experts over
+    ``ep_axis``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    has_w3 = "w3" in p
+    act_kind = act
+
+    def body(xb, router, w1, w2, w3):
+        # xb: (B_loc, S_loc, d) — every device routes a distinct token slice
+        # (replicating over EP would duplicate expert work ep× — confirmed
+        # 9–16× compute blowup, see EXPERIMENTS §Perf)
+        ep = lax.axis_size(ep_axis)
+        e_loc = w1.shape[0]
+        e = e_loc * ep
+        b_loc, s_loc, d = xb.shape
+        x_loc = xb.reshape(b_loc * s_loc, d)
+        t_loc = b_loc * s_loc
+        k = topk
+        logits = x_loc.astype(jnp.float32) @ router.astype(jnp.float32)
+        gates, eidx = _topk_gates(logits, k)
+        flat_e = eidx.reshape(-1)
+        flat_g = gates.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(t_loc), k)
+        dest = flat_e // e_loc                       # destination EP shard
+        s_b = max(1, -(-int(t_loc * k * capacity_factor) // ep))
+        s_b = min(s_b, t_loc * k)
+
+        order = jnp.argsort(dest)                    # AMPED: group by owner
+        dest_s = dest[order]
+        seg_start = jnp.searchsorted(dest_s, jnp.arange(ep))
+        rank = jnp.arange(t_loc * k) - seg_start[dest_s]
+        keep = rank < s_b
+
+        send_x = _bucket_scatter(
+            jnp.where(keep[:, None], x_loc[flat_tok[order]],
+                      jnp.zeros((), x_loc.dtype)),
+            dest_s, rank, ep, s_b)              # payload stays bf16
+        send_le = _bucket_scatter(
+            jnp.where(keep, (flat_e[order] % e_loc) + 1, 0), dest_s, rank,
+            ep, s_b)                                  # +1: 0 marks empty
+
+        recv_x = lax.all_to_all(send_x, ep_axis, 0, 0, tiled=True)
+        recv_le = lax.all_to_all(send_le, ep_axis, 0, 0, tiled=True)
+
+        xs = recv_x.reshape(ep * s_b, d)
+        le = recv_le.reshape(ep * s_b) - 1
+        valid = le >= 0
+        ys = _local_expert_ffn(xs, jnp.maximum(le, 0), valid,
+                               w1, w2, w3, act_kind, capacity_factor)
+
+        back = lax.all_to_all(ys.reshape(ep, s_b, d).astype(x_loc.dtype),
+                              ep_axis, 0, 0,
+                              tiled=True)             # aligned with send slots
+        got = back[dest_s, jnp.minimum(rank, s_b - 1)]
+        got = jnp.where(keep[:, None], got, 0.0)
+        contrib = got * flat_g[order][:, None]
+        out = jnp.zeros((t_loc, d), jnp.float32).at[flat_tok[order]].add(contrib)
+        return out.astype(xb.dtype).reshape(b_loc, s_loc, d)
+
+    w3 = p.get("w3")
+    # Boundary sharding: prefer splitting the BATCH over dp×ep (train-shaped
+    # inputs, B >= device count) — layout-compatible with everything around
+    # the FFN. Fall back to batch×sequence when B is small (prefill).
+    tok_axes = (tuple(dp_axes) if dp_axes else ()) + (ep_axis,)
+    n_shards = 1
+    for a in tok_axes:
+        n_shards *= mesh.shape[a]
+    if x.shape[0] % n_shards == 0:
+        x_spec = P(tok_axes, None, None)
+    else:
+        x_spec = P(dp_axes, ep_axis, None)
+    in_specs = (x_spec, P(None, None),
+                P(ep_axis, None, None), P(ep_axis, None, None),
+                P(ep_axis, None, None) if has_w3 else P())
+    fn = jax.shard_map(
+        lambda xl, r, a, b, c: body(xl, r, a, b, c if has_w3 else None),
+        mesh=mesh, in_specs=in_specs, out_specs=x_spec,
+        check_vma=False)
+    dummy = jnp.zeros((), x.dtype)
+    out = fn(x, p["router"], p["w1"], p["w2"], w3 if has_w3 else dummy)
+    return out, {}
+
+
+def moe_ref_dense(x, p, *, topk: int, act: str = "swiglu"):
+    """O(T·E) oracle: run every expert on every token, combine with top-k
+    gates. No capacity drops — comparisons must use cap >= tokens."""
+    t, d = x.shape
+    e = p["router"].shape[1]
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gates, eidx = _topk_gates(logits, topk)
+    ys = _expert_ffn(jnp.broadcast_to(x, (e, t, d)), p, act)   # (E,T,d)
+    onehot = jax.nn.one_hot(eidx, e)                           # (T,k,E)
+    w = (onehot * gates[..., None]).sum(1)                     # (T,E)
+    return jnp.einsum("te,etd->td", w, ys.astype(jnp.float32)).astype(x.dtype)

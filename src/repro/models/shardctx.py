@@ -1,0 +1,38 @@
+"""Scoped sharding hints for mesh-agnostic model code.
+
+Model modules never hard-code mesh axis names; launch/serving code that
+knows the mesh installs named PartitionSpec hints around trace time, and
+layers apply them via :func:`constrain`. Used where GSPMD's default operand
+alignment picks the wrong side — e.g. sequence-parallel decode attention,
+where without a hint XLA re-shards the multi-GB KV cache every step to
+match the (kilobyte-sized) head-sharded query instead of replicating q.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+_HINTS: contextvars.ContextVar[dict] = contextvars.ContextVar(
+    "repro_shard_hints", default={})
+
+
+@contextlib.contextmanager
+def hints(**kw):
+    token = _HINTS.set({**_HINTS.get(), **kw})
+    try:
+        yield
+    finally:
+        _HINTS.reset(token)
+
+
+def get(name: str):
+    return _HINTS.get().get(name)
+
+
+def constrain(x, name: str):
+    spec = _HINTS.get().get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

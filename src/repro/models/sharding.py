@@ -1,0 +1,135 @@
+"""Parameter / activation partition rules (GSPMD specs).
+
+Mesh axes: ``data`` (+ ``pod`` when multi-pod) = data parallel;
+``model`` = tensor/expert parallel. Rules are keyed on parameter leaf names
+(paths are stable because params are plain dicts) and are applied to the
+eval_shape pytree, so the dry-run derives every in_sharding without
+allocating.
+
+ZeRO-1: optimizer moments take the param spec *plus* sharding of the first
+divisible unsharded dim over the DP axes (see training/optimizer.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "dp_axes", "batch_spec", "make_shardings"]
+
+TP = "model"
+
+# leaf name → spec on the *per-layer* shape (stacked cycle dim is prepended
+# automatically when the leaf has an extra leading dim).
+_RULES: dict[str, tuple] = {
+    # embeddings
+    "embed": ("vocab_d",),
+    "pos_emb": (None, None),
+    # attention
+    "wq": (None, TP), "wk": (None, TP), "wv": (None, TP), "wo": (TP, None),
+    "bq": (TP,), "bk": (TP,), "bv": (TP,), "bo": (None,),
+    # MLA
+    "w_dkv": (None, None), "w_uk": (None, TP, None), "w_uv": (None, TP, None),
+    # dense mlp
+    "w1": ("mlp_in",), "w3": ("mlp_in",), "w2": ("mlp_out",),
+    # moe shared experts
+    "s1": (None, TP), "s3": (None, TP), "s2": (TP, None),
+    "router": (None, None),
+    # mamba
+    "in_proj": (None, TP), "conv_w": (None, TP), "conv_b": (TP,),
+    "x_proj": (TP, None), "dt_proj": (None, TP), "dt_bias": (TP,),
+    "A_log": (TP, None), "D": (TP,), "out_proj": (TP, None),
+    # rwkv6
+    "wr": (None, TP), "wg": (None, TP), "ww": (None, TP),
+    "w_base": (TP,), "u": (TP, None), "ln_w": (TP, None), "ln_b": (TP, None),
+    "mu_r": (None,), "mu_k": (None,), "mu_v": (None,), "mu_g": (None,),
+    "mu_w": (None,),
+    # rwkv channel mix
+    "mu_ck": (None,), "mu_cr": (None,),
+    "ck": (None, TP), "cr": (None, None), "cv": (TP, None),
+    # cross attention
+    "xwq": (None, TP), "xwk": (None, TP), "xwv": (None, TP), "xwo": (TP, None),
+}
+
+
+def _spec_for(name: str, ndim: int, parent: str | None) -> P:
+    rule = _RULES.get(name)
+    if name == "embed":
+        return P(TP, None)                    # vocab-sharded (tied unembed)
+    if rule is None:
+        return P()                            # norms, scalars → replicated
+    if name in ("w1", "w3", "w2"):
+        # In the full params tree these leaves are cycle-stacked:
+        #   dense : (cyc, d, f) / (cyc, f, d)        → 3-D
+        #   MoE   : (cyc, E, d, f) / (cyc, E, f, d)  → 4-D, experts → EP
+        if ndim >= 4:
+            return P(*([None] * (ndim - 4) + [None, TP, None, None]))
+        if name == "w2":
+            return _pad(P(TP, None), ndim, 2)
+        return _pad(P(None, TP), ndim, 2)
+    spec = P(*rule)
+    return _pad(spec, ndim, len(rule))
+
+
+def _pad(spec: P, ndim: int, rank: int) -> P:
+    """Prepend None for stacked leading dims (cycle axis)."""
+    if ndim > rank:
+        return P(*([None] * (ndim - rank) + list(spec)))
+    return spec
+
+
+def param_specs(params_shape: Any) -> Any:
+    """Pytree of PartitionSpec matching a params (shape) pytree."""
+
+    def walk(path, leaf):
+        name = None
+        for part in reversed(path):
+            if hasattr(part, "key"):
+                name = part.key
+                break
+            if hasattr(part, "name"):
+                name = part.name
+                break
+        ndim = len(leaf.shape)
+        return _spec_for(name, ndim, None)
+
+    return jax.tree_util.tree_map_with_path(walk, params_shape)
+
+
+def sanitize_specs(specs: Any, shapes: Any, mesh: Mesh) -> Any:
+    """Drop sharding on dims the mesh axes don't divide (e.g. whisper's
+    51865-row vocab on a 16-way model axis → replicated embed)."""
+
+    def size_of(entry) -> int:
+        if entry is None:
+            return 1
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    def one(spec: P, shape) -> P:
+        dims = shape.shape
+        entries = list(spec) + [None] * (len(dims) - len(spec))
+        out = [e if (e is None or dims[i] % size_of(e) == 0) else None
+               for i, e in enumerate(entries)]
+        return P(*out)
+
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(dp_axes(mesh))
+
+
+def make_shardings(mesh: Mesh, tree_of_specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

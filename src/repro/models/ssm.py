@@ -1,0 +1,234 @@
+"""State-space / linear-recurrence mixers: Mamba (Jamba) and RWKV6 (Finch).
+
+Each mixer provides:
+  * a sequential ``lax.scan`` prefill (the semantic reference),
+  * a single-token decode step carrying O(1) state (this is what makes
+    ``long_500k`` decode run without a KV cache),
+  * for RWKV6, a chunked (matmul-parallel) prefill validated against the
+    scan — the MXU-friendly form used for 32k-token prefill.
+
+Decay safety: per-channel decays are clamped to exp(-8) ≤ w ≤ exp(-1e-4) so
+the chunked formulation's exp(±L) factors stay representable in f32 over a
+chunk (documented deviation; real RWKV kernels renormalise per position).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mamba_scan", "mamba_step", "rwkv6_scan", "rwkv6_chunked",
+           "rwkv6_step"]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, Mamba-1 parameterisation)
+# ---------------------------------------------------------------------------
+
+def _mamba_gates(xc, p):
+    """Input-dependent (Δ, B, C) from the conv output."""
+    dt_rank = p["dt_proj"].shape[0]
+    n = p["A_log"].shape[1]
+    dbc = xc @ p["x_proj"]                           # (..., dt_rank + 2n)
+    dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    b = dbc[..., dt_rank:dt_rank + n]
+    c = dbc[..., dt_rank + n:]
+    return dt, b, c                                   # (...,d_in),(...,n),(...,n)
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x (B,S,d_in), w (k,d_in)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b
+
+
+def mamba_scan(x, p):
+    """Full-sequence Mamba mixer. x (B,S,d) → (B,S,d)."""
+    xz = x @ p["in_proj"]                             # (B,S,2*d_in)
+    d_in = xz.shape[-1] // 2
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    xc = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+    dt, bb, cc = _mamba_gates(xc, p)
+    a = -jnp.exp(p["A_log"])                          # (d_in, n)
+
+    def step(h, inp):
+        xc_t, dt_t, b_t, c_t = inp                    # (B,d_in),(B,d_in),(B,n),(B,n)
+        da = jnp.exp(dt_t[..., None] * a[None])       # (B,d_in,n)
+        h = da * h + (dt_t * xc_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((x.shape[0], d_in, a.shape[1]), jnp.float32)
+    xs = (xc.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          bb.transpose(1, 0, 2).astype(jnp.float32),
+          cc.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + xc * p["D"][None, None, :]
+    out = (y * jax.nn.silu(z)).astype(x.dtype)
+    return out @ p["out_proj"]
+
+
+def mamba_step(x_t, state, p):
+    """One decode step. x_t (B,d); state = {'conv': (B,k-1,d_in),
+    'h': (B,d_in,n)}. Returns (y (B,d), new state)."""
+    xz = x_t @ p["in_proj"]
+    d_in = xz.shape[-1] // 2
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    k = p["conv_w"].shape[0]
+    conv_buf = jnp.concatenate([state["conv"], xi[:, None, :]], axis=1)  # (B,k,d_in)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", conv_buf, p["conv_w"]) + p["conv_b"])
+    dt, bb, cc = _mamba_gates(xc, p)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt[..., None] * a[None])
+    h = da * state["h"] + (dt * xc)[..., None] * bb[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cc) + xc * p["D"][None, :]
+    out = (y * jax.nn.silu(z)).astype(x_t.dtype) @ p["out_proj"]
+    return out, {"conv": conv_buf[:, 1:], "h": h}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) time-mix with data-dependent per-channel decay
+# ---------------------------------------------------------------------------
+
+_W_MIN, _W_MAX = -8.0, -1e-4  # bounds on log-decay
+
+
+def _rwkv_proj(x, x_prev, p):
+    """Token-shift mixing + projections. x, x_prev: (B,S,d).
+    Returns r,k,v,g (B,S,H,hd), logw (B,S,H,hd)."""
+    d = x.shape[-1]
+    hd = p["u"].shape[1]
+    h = d // hd
+
+    def mix(name):
+        mu = p[f"mu_{name}"]
+        return x + mu * (x_prev - x)
+
+    def heads(y):
+        return y.reshape(y.shape[:-1] + (h, hd))
+
+    r = heads(mix("r") @ p["wr"])
+    k = heads(mix("k") @ p["wk"])
+    v = heads(mix("v") @ p["wv"])
+    g = jax.nn.silu(mix("g") @ p["wg"])
+    logw = -jax.nn.softplus(mix("w") @ p["ww"] + p["w_base"])
+    logw = jnp.clip(logw, _W_MIN, _W_MAX)
+    return r, k, v, g, heads(logw)
+
+
+def _shift(x):
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+def rwkv6_scan(x, p):
+    """Reference scan. x (B,S,d) → (B,S,d) (before output proj ⊙ g)."""
+    r, k, v, g, logw = _rwkv_proj(x, _shift(x), p)
+    u = p["u"]                                        # (H, hd)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                      # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]    # (B,H,hd,hd)
+        o = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+        s = jnp.exp(w_t)[..., :, None] * s + kv
+        return s, o
+
+    b, s_len, h, hd = r.shape
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for t in (r, k, v, logw))
+    _, os = jax.lax.scan(step, s0, xs)
+    o = os.transpose(1, 0, 2, 3)                      # (B,S,H,hd)
+    return _rwkv_out(o, g, x, p)
+
+
+def rwkv6_chunked(x, p, *, chunk: int = 64):
+    """Chunked (intra-chunk matmul) form — equal to rwkv6_scan.
+
+    Within a chunk, with L_t = Σ_{j<=t} logw_j:
+      o_t = r_t·A_{t-1}·S_in + Σ_{s<t} (r_t e^{L_{t-1}-L_s})·k_s v_s
+            + (r_t ⊙ u ⊙ k_t)·v_t
+      S_out = e^{L_C} S_in + Σ_s e^{L_C - L_s} k_s v_s
+    """
+    b, s_len, d = x.shape
+    r, k, v, g, logw = _rwkv_proj(x, _shift(x), p)
+    u = p["u"]
+    h, hd = r.shape[2], r.shape[3]
+    c = min(chunk, s_len)
+    while s_len % c:         # largest divisor of s_len not exceeding chunk
+        c -= 1
+    nc = s_len // c
+
+    def resh(t):
+        return t.reshape(b, nc, c, h, hd).transpose(1, 0, 3, 2, 4)  # (nc,B,H,c,hd)
+
+    rr, kk, vv, ww = resh(r).astype(jnp.float32), resh(k).astype(jnp.float32), \
+        resh(v).astype(jnp.float32), resh(logw).astype(jnp.float32)
+
+    def chunk_step(s, inp):
+        rc, kc, vc, wc = inp                          # (B,H,c,hd)
+        lcum = jnp.cumsum(wc, axis=2)                 # L_t (inclusive)
+        l_prev = lcum - wc                            # L_{t-1}
+        l_tot = lcum[:, :, -1:, :]                    # L_C
+        q_dec = rc * jnp.exp(l_prev)                  # r_t e^{L_{t-1}}
+        k_dec = kc * jnp.exp(-lcum)                   # k_s e^{-L_s}
+        inter = jnp.einsum("bhti,bhij->bhtj", q_dec, s)
+        scores = jnp.einsum("bhti,bhsi->bhts", q_dec, k_dec)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        intra = jnp.einsum("bhts,bhsj->bhtj", scores, vc)
+        diag = jnp.einsum("bhti,bhti,bhtj->bhtj",
+                          rc, u[None, :, None, :] * kc, vc)
+        o = inter + intra + diag
+        k_rem = kc * jnp.exp(l_tot - lcum)            # k_s e^{L_C - L_s}
+        s_new = jnp.exp(l_tot[:, :, 0, :])[..., :, None] * s + \
+            jnp.einsum("bhsi,bhsj->bhij", k_rem, vc)
+        return s_new, o
+
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, os = jax.lax.scan(chunk_step, s0, (rr, kk, vv, ww))
+    o = os.transpose(1, 0, 3, 2, 4).reshape(b, s_len, h, hd)
+    return _rwkv_out(o, g, x, p)
+
+
+def rwkv6_step(x_t, state, p):
+    """One decode step. x_t (B,d); state {'shift': (B,d), 's': (B,H,hd,hd)}."""
+    x1 = x_t[:, None, :]
+    r, k, v, g, logw = _rwkv_proj(x1, state["shift"][:, None, :], p)
+    r, k, v, logw = (t[:, 0].astype(jnp.float32) for t in (r, k, v, logw))
+    g = g[:, 0]
+    u = p["u"]
+    kv = k[..., :, None] * v[..., None, :]
+    o = jnp.einsum("bhi,bhij->bhj", r, state["s"] + u[None, :, :, None] * kv)
+    s_new = jnp.exp(logw)[..., :, None] * state["s"] + kv
+    out = _rwkv_out(o[:, None], g[:, None], x1, p)[:, 0]
+    return out, {"shift": x_t, "s": s_new}
+
+
+def _rwkv_out(o, g, x, p):
+    """Per-head groupnorm → gate → output projection."""
+    b, s, h, hd = o.shape
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + 1e-5)
+    o = o * p["ln_w"][None, None] + p["ln_b"][None, None]
+    o = o.reshape(b, s, h * hd).astype(x.dtype) * g
+    return o @ p["wo"]
+
+
+def rwkv_channel_mix(x, p):
+    """RWKV channel-mix FFN (squared-relu with receptance gate)."""
+    xx = _shift(x)
+    xk = x + p["mu_ck"] * (xx - x)
+    xr = x + p["mu_cr"] * (xx - x)
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (k @ p["cv"])
+
+
+def rwkv_channel_mix_step(x_t, shift_state, p):
+    xx = shift_state
+    xk = x_t + p["mu_ck"] * (xx - x_t)
+    xr = x_t + p["mu_cr"] * (xx - x_t)
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (k @ p["cv"]), x_t

@@ -1,0 +1,789 @@
+"""Composable decoder-LM / encoder-decoder definition.
+
+A model is a cyclic ``pattern`` of :class:`LayerSpec` blocks tiled to
+``n_layers``. Parameters for each pattern position are **stacked across
+cycles** and the forward pass is a single ``lax.scan`` over cycles — compile
+time and HLO size are O(pattern), not O(n_layers), which is what makes the
+512-device dry-run of 96–100 layer models tractable.
+
+Mixers: GQA attention (sliding window / softcap options), MLA (DeepSeek),
+Mamba, RWKV6, cross-attention (VLM); FFNs: dense (swiglu / squared-relu /
+gelu), MoE (+shared experts), RWKV channel-mix. See attention.py / ffn.py /
+ssm.py for the math; this file wires blocks, params, caches and the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import shardctx
+from repro.models import ssm as ssm_mod
+from repro.models.common import dense_init, layer_norm, rms_norm, rope_at, softcap
+
+__all__ = ["LayerSpec", "ModelConfig", "Model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"            # attn | mla | mamba | rwkv6 | cross_attn | none
+    causal: bool = True
+    window: int | None = None      # sliding-window width (local attention)
+    attn_softcap: float | None = None
+    cross: bool = False            # extra cross-attn sub-block (whisper dec)
+    ffn: str = "dense"             # dense | moe | rwkv_cm | none
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    mlp_kind: str = "gelu"
+    input_dim: int | None = None   # stub frontend embedding dim (defaults d)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    mlp_kind: str = "swiglu"
+    # MoE
+    n_experts: int = 0
+    topk: int = 2
+    moe_d_ff: int | None = None
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    moe_dispatch: str = "sort"
+    # MLA
+    kv_lora: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # Mamba
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    # RWKV
+    rwkv_head_dim: int = 64
+    # misc
+    rope_theta: float = 10000.0
+    final_softcap: float | None = None
+    emb_scale: bool = False
+    post_norm: bool = False        # gemma2 sandwich norm
+    norm_offset: float = 0.0       # 1.0 → gemma (1+scale) RMSNorm
+    norm_kind: str = "rms"         # rms | ln
+    use_bias: bool = False
+    use_abs_pos: bool = False      # learned absolute positions (whisper)
+    max_pos: int = 0
+    norm_eps: float = 1e-6
+    dtype: str = "float32"
+    encoder: EncoderConfig | None = None
+    # runtime knobs
+    attn_chunk: int = 512
+    rwkv_chunk: int = 64
+    remat: str = "none"            # none | full | dots
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def layers(self) -> tuple[LayerSpec, ...]:
+        reps = -(-self.n_layers // len(self.pattern))
+        return (self.pattern * reps)[: self.n_layers]
+
+    @property
+    def n_cycles(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, \
+            f"{self.name}: n_layers {self.n_layers} % pattern {len(self.pattern)}"
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def np_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+# ===========================================================================
+# Parameter construction (also the shape spec for eval_shape / dry-run)
+# ===========================================================================
+
+def _maybe_bias(cfg, shape):
+    return {"b": jnp.zeros(shape, cfg.np_dtype)} if cfg.use_bias else {}
+
+
+def _init_mixer(cfg: ModelConfig, spec: LayerSpec, key) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 12)
+    dt = cfg.np_dtype
+    p: dict[str, Any] = {"norm1": _norm_param(cfg, d)}
+    if spec.mixer == "attn" or spec.mixer == "cross_attn":
+        p.update(
+            wq=dense_init(ks[0], (d, h * hd), dtype=dt),
+            wk=dense_init(ks[1], (d, kvh * hd), dtype=dt),
+            wv=dense_init(ks[2], (d, kvh * hd), dtype=dt),
+            wo=dense_init(ks[3], (h * hd, d), dtype=dt),
+        )
+        if cfg.use_bias:
+            p.update(bq=jnp.zeros((h * hd,), dt), bk=jnp.zeros((kvh * hd,), dt),
+                     bv=jnp.zeros((kvh * hd,), dt), bo=jnp.zeros((d,), dt))
+    elif spec.mixer == "mla":
+        dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        lora = cfg.kv_lora
+        p.update(
+            wq=dense_init(ks[0], (d, h * (dn + dr)), dtype=dt),
+            w_dkv=dense_init(ks[1], (d, lora + dr), dtype=dt),
+            kv_norm=_norm_param(cfg, lora),
+            w_uk=dense_init(ks[2], (lora, h, dn), dtype=dt),
+            w_uv=dense_init(ks[3], (lora, h, dv), dtype=dt),
+            wo=dense_init(ks[4], (h * dv, d), dtype=dt),
+        )
+    elif spec.mixer == "mamba":
+        d_in = cfg.mamba_expand * d
+        n = cfg.mamba_d_state
+        dtr = max(1, math.ceil(d / 16))
+        dt_init = jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[5], (d_in,)) * 0.099 + 0.001,
+                     1e-4, None))).astype(dt)
+        p.update(
+            in_proj=dense_init(ks[0], (d, 2 * d_in), dtype=dt),
+            conv_w=dense_init(ks[1], (cfg.mamba_d_conv, d_in), dtype=dt),
+            conv_b=jnp.zeros((d_in,), dt),
+            x_proj=dense_init(ks[2], (d_in, dtr + 2 * n), dtype=dt),
+            dt_proj=dense_init(ks[3], (dtr, d_in), dtype=dt),
+            dt_bias=dt_init,
+            A_log=jnp.log(jnp.broadcast_to(
+                jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n))).astype(dt),
+            D=jnp.ones((d_in,), dt),
+            out_proj=dense_init(ks[4], (d_in, d), dtype=dt),
+        )
+    elif spec.mixer == "rwkv6":
+        hd_r = cfg.rwkv_head_dim
+        h_r = d // hd_r
+        mus = {f"mu_{n}": (jax.random.uniform(k, (d,)) * 0.5).astype(dt)
+               for n, k in zip(("r", "k", "v", "g", "w"), ks[5:10])}
+        p.update(
+            wr=dense_init(ks[0], (d, d), dtype=dt),
+            wk=dense_init(ks[1], (d, d), dtype=dt),
+            wv=dense_init(ks[2], (d, d), dtype=dt),
+            wg=dense_init(ks[3], (d, d), dtype=dt),
+            ww=dense_init(ks[4], (d, d), scale=0.01, dtype=dt),
+            w_base=jnp.ones((d,), dt) * 2.0,
+            u=(jax.random.uniform(ks[10], (h_r, hd_r)) - 0.5).astype(dt),
+            ln_w=jnp.ones((h_r, hd_r), dt),
+            ln_b=jnp.zeros((h_r, hd_r), dt),
+            wo=dense_init(ks[11], (d, d), dtype=dt),
+            **mus,
+        )
+    elif spec.mixer == "none":
+        pass
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.post_norm and spec.mixer != "none":
+        p["pn1"] = _norm_param(cfg, d)
+    return p
+
+
+def _init_cross(cfg: ModelConfig, key) -> dict:
+    d, hd, h = cfg.d_model, cfg.hd, cfg.n_heads
+    kvh = cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.np_dtype
+    return dict(
+        normx=_norm_param(cfg, d),
+        xwq=dense_init(ks[0], (d, h * hd), dtype=dt),
+        xwk=dense_init(ks[1], (d, kvh * hd), dtype=dt),
+        xwv=dense_init(ks[2], (d, kvh * hd), dtype=dt),
+        xwo=dense_init(ks[3], (h * hd, d), dtype=dt),
+    )
+
+
+def _init_ffn(cfg: ModelConfig, spec: LayerSpec, key) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    dt = cfg.np_dtype
+    p: dict[str, Any] = {"norm2": _norm_param(cfg, d)}
+    if spec.ffn == "dense":
+        f = cfg.d_ff
+        p.update(w1=dense_init(ks[0], (d, f), dtype=dt),
+                 w2=dense_init(ks[1], (f, d), dtype=dt))
+        if cfg.mlp_kind in ("swiglu", "geglu"):
+            p["w3"] = dense_init(ks[2], (d, f), dtype=dt)
+    elif spec.ffn == "moe":
+        e, f = cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+        p.update(router=dense_init(ks[0], (d, e), dtype=jnp.float32),
+                 w1=dense_init(ks[1], (e, d, f), dtype=dt),
+                 w2=dense_init(ks[2], (e, f, d), dtype=dt))
+        if cfg.mlp_kind in ("swiglu", "geglu"):
+            p["w3"] = dense_init(ks[3], (e, d, f), dtype=dt)
+        if cfg.n_shared_experts:
+            fs = f * cfg.n_shared_experts
+            p.update(s1=dense_init(ks[4], (d, fs), dtype=dt),
+                     s2=dense_init(ks[5], (fs, d), dtype=dt))
+            if cfg.mlp_kind in ("swiglu", "geglu"):
+                p["s3"] = dense_init(ks[6], (d, fs), dtype=dt)
+    elif spec.ffn == "rwkv_cm":
+        f = cfg.d_ff
+        p.update(mu_ck=(jax.random.uniform(ks[0], (d,)) * 0.5).astype(dt),
+                 mu_cr=(jax.random.uniform(ks[1], (d,)) * 0.5).astype(dt),
+                 ck=dense_init(ks[2], (d, f), dtype=dt),
+                 cr=dense_init(ks[3], (d, d), dtype=dt),
+                 cv=dense_init(ks[4], (f, d), dtype=dt))
+    elif spec.ffn == "none":
+        pass
+    else:
+        raise ValueError(spec.ffn)
+    if cfg.post_norm and spec.ffn != "none":
+        p["pn2"] = _norm_param(cfg, d)
+    return p
+
+
+def _norm_param(cfg: ModelConfig, d: int):
+    if cfg.norm_kind == "ln":
+        return {"w": jnp.ones((d,), cfg.np_dtype),
+                "b": jnp.zeros((d,), cfg.np_dtype)}
+    return {"w": jnp.zeros((d,), cfg.np_dtype) if cfg.norm_offset
+            else jnp.ones((d,), cfg.np_dtype)}
+
+
+def _apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm_kind == "ln":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps, offset=cfg.norm_offset)
+
+
+# ===========================================================================
+# Model
+# ===========================================================================
+
+class Model:
+    """Functional model bound to a config. All methods are jit-friendly."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- init -------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        n_pat = len(cfg.pattern)
+        cyc = cfg.n_cycles
+        keys = jax.random.split(key, 4 + n_pat)
+
+        def init_position(pi: int) -> dict:
+            spec = cfg.pattern[pi]
+
+            def one_cycle(k):
+                k1, k2, k3 = jax.random.split(k, 3)
+                p = {"mixer": _init_mixer(cfg, spec, k1),
+                     "ffn": _init_ffn(cfg, spec, k2)}
+                if spec.cross:
+                    p["cross"] = _init_cross(cfg, k3)
+                return p
+
+            cycle_keys = jax.random.split(keys[4 + pi], cyc)
+            return jax.vmap(one_cycle)(cycle_keys)     # stacked (cyc, ...)
+
+        params = {
+            "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model), scale=1.0,
+                                dtype=cfg.np_dtype),
+            "final_norm": _norm_param(cfg, cfg.d_model),
+            "groups": [init_position(pi) for pi in range(n_pat)],
+        }
+        if cfg.use_abs_pos:
+            params["pos_emb"] = dense_init(keys[1], (cfg.max_pos, cfg.d_model),
+                                           scale=0.02, dtype=cfg.np_dtype)
+        if cfg.encoder is not None:
+            params["encoder"] = self._init_encoder(keys[2])
+        return params
+
+    def _init_encoder(self, key) -> dict:
+        cfg = self.cfg
+        enc = cfg.encoder
+        d = cfg.d_model
+        spec = LayerSpec(mixer="attn", causal=False, ffn="dense")
+        ecfg = dataclasses.replace(
+            cfg, n_heads=enc.n_heads, n_kv_heads=enc.n_heads, d_ff=enc.d_ff,
+            mlp_kind=enc.mlp_kind, post_norm=False)
+        keys = jax.random.split(key, enc.n_layers * 2 + 1)
+
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            return {"mixer": _init_mixer(ecfg, spec, k1),
+                    "ffn": _init_ffn(ecfg, spec, k2)}
+
+        stack = jax.vmap(one)(jax.random.split(keys[0], enc.n_layers))
+        return {"layers": stack, "final_norm": _norm_param(cfg, d)}
+
+    # ---- sub-blocks ---------------------------------------------------------
+    def _attn_full(self, spec: LayerSpec, p, x, pos0=0):
+        cfg = self.cfg
+        b, s, d = x.shape
+        h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = (x @ p["wq"]).reshape(b, s, h, hd)
+        k = (x @ p["wk"]).reshape(b, s, kvh, hd)
+        v = (x @ p["wv"]).reshape(b, s, kvh, hd)
+        if cfg.use_bias:
+            q += p["bq"].reshape(1, 1, h, hd)
+            k += p["bk"].reshape(1, 1, kvh, hd)
+            v += p["bv"].reshape(1, 1, kvh, hd)
+        if not cfg.use_abs_pos:
+            pos = jnp.arange(s) + pos0
+            q = rope_at(q, pos[None], cfg.rope_theta)
+            k = rope_at(k, pos[None], cfg.rope_theta)
+        o = attn_mod.attention_prefill(
+            q, k, v, causal=spec.causal, window=spec.window,
+            cap=spec.attn_softcap, chunk=cfg.attn_chunk)
+        o = o.reshape(b, s, h * hd) @ p["wo"]
+        if cfg.use_bias:
+            o += p["bo"]
+        return o, {"k": k, "v": v}
+
+    def _attn_step(self, spec: LayerSpec, p, x, cache, pos):
+        cfg = self.cfg
+        b, s, d = x.shape                               # s == 1
+        h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = (x @ p["wq"]).reshape(b, s, h, hd)
+        k = (x @ p["wk"]).reshape(b, s, kvh, hd)
+        v = (x @ p["wv"]).reshape(b, s, kvh, hd)
+        if cfg.use_bias:
+            q += p["bq"].reshape(1, 1, h, hd)
+            k += p["bk"].reshape(1, 1, kvh, hd)
+            v += p["bv"].reshape(1, 1, kvh, hd)
+        if not cfg.use_abs_pos:
+            posv = jnp.full((1, 1), pos)
+            q = rope_at(q, posv, cfg.rope_theta)
+            k = rope_at(k, posv, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        o = attn_mod.attention_decode(q, kc, vc, pos + 1, window=spec.window,
+                                      cap=spec.attn_softcap)
+        o = o.reshape(b, s, h * hd) @ p["wo"]
+        if cfg.use_bias:
+            o += p["bo"]
+        return o, {"k": kc, "v": vc}
+
+    def _mla_full(self, p, x):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        h = cfg.n_heads
+        dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+        q = (x @ p["wq"]).reshape(b, s, h, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        ckv_full = x @ p["w_dkv"]
+        c_kv = _apply_norm(cfg, p["kv_norm"], ckv_full[..., :cfg.kv_lora])
+        k_rope = ckv_full[..., cfg.kv_lora:][:, :, None, :]
+        pos = jnp.arange(s)[None]
+        q_rope = rope_at(q_rope, pos, cfg.rope_theta)
+        k_rope = rope_at(k_rope, pos, cfg.rope_theta)
+        o = attn_mod.mla_prefill(q_nope, q_rope, c_kv, k_rope,
+                                 p["w_uk"], p["w_uv"], chunk=cfg.attn_chunk)
+        o = o.reshape(b, s, h * cfg.v_head_dim) @ p["wo"]
+        return o, {"ckv": c_kv, "kr": k_rope[:, :, 0, :]}
+
+    def _mla_step(self, p, x, cache, pos):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        h = cfg.n_heads
+        dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+        q = (x @ p["wq"]).reshape(b, s, h, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        ckv_full = x @ p["w_dkv"]
+        c_kv = _apply_norm(cfg, p["kv_norm"], ckv_full[..., :cfg.kv_lora])
+        k_rope = ckv_full[..., cfg.kv_lora:][:, :, None, :]
+        posv = jnp.full((1, 1), pos)
+        q_rope = rope_at(q_rope, posv, cfg.rope_theta)
+        k_rope = rope_at(k_rope, posv, cfg.rope_theta)
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), pos, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], k_rope[:, :, 0, :].astype(cache["kr"].dtype), pos, axis=1)
+        o = attn_mod.mla_decode_absorbed(q_nope, q_rope, ckv_c, kr_c, pos + 1,
+                                         p["w_uk"], p["w_uv"])
+        o = o.reshape(b, s, h * cfg.v_head_dim) @ p["wo"]
+        return o, {"ckv": ckv_c, "kr": kr_c}
+
+    def _cross(self, p, x, xkv):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        mem = xkv["x"]
+        q = (x @ p["xwq"]).reshape(b, s, h, hd)
+        k = (mem @ p["xwk"]).reshape(b, -1, kvh, hd)
+        v = (mem @ p["xwv"]).reshape(b, -1, kvh, hd)
+        o = attn_mod.cross_attention(q, k, v)
+        return o.reshape(b, s, h * hd) @ p["xwo"]
+
+    def _ffn(self, spec: LayerSpec, p, x):
+        cfg = self.cfg
+        if spec.ffn == "dense":
+            return ffn_mod.mlp(x, p, cfg.mlp_kind)
+        if spec.ffn == "moe":
+            b, s, d = x.shape
+            moe_axes = shardctx.get("moe_axes")
+            # a2a engages only when the batch divides dp×ep (batch-first
+            # boundary): sequence-split boundaries leaked S-sharding into
+            # the attention scans and regressed prefill — measured and
+            # documented in EXPERIMENTS.md §Perf It.5; small-batch cells
+            # fall back to the sorted-segment dispatch.
+            if (cfg.moe_dispatch == "a2a" and moe_axes is not None
+                    and b % (moe_axes["dp_size"] * moe_axes["ep_size"]) == 0):
+                out, _aux = ffn_mod.moe_a2a(
+                    x, p, topk=cfg.topk,
+                    capacity_factor=cfg.capacity_factor, act=cfg.mlp_kind,
+                    dp_axes=moe_axes["dp"], ep_axis=moe_axes["ep"],
+                    mesh=moe_axes["mesh"])
+            else:
+                flat = x.reshape(b * s, d)
+                out, _aux = ffn_mod.moe(
+                    flat, p, topk=cfg.topk,
+                    capacity_factor=cfg.capacity_factor,
+                    dispatch=cfg.moe_dispatch
+                    if cfg.moe_dispatch != "a2a" else "sort",
+                    act=cfg.mlp_kind)
+                out = out.reshape(b, s, d)
+            if cfg.n_shared_experts:
+                sp = {"w1": p["s1"], "w2": p["s2"]}
+                if "s3" in p:
+                    sp["w3"] = p["s3"]
+                out = out + ffn_mod.mlp(x, sp, cfg.mlp_kind)
+            return out
+        if spec.ffn == "rwkv_cm":
+            return ssm_mod.rwkv_channel_mix(x, p)
+        raise ValueError(spec.ffn)
+
+    # ---- one layer ----------------------------------------------------------
+    def _layer_full(self, spec: LayerSpec, p, x, xkv=None, *, want_cache,
+                    seq_mode="chunked"):
+        cfg = self.cfg
+        cache = {}
+        if spec.mixer != "none":
+            xin = _apply_norm(cfg, p["mixer"]["norm1"], x)
+            if spec.mixer == "attn":
+                o, c = self._attn_full(spec, p["mixer"], xin)
+            elif spec.mixer == "cross_attn":
+                q = self._cross_as_mixer(p["mixer"], xin, xkv)
+                o, c = q, {}
+            elif spec.mixer == "mla":
+                o, c = self._mla_full(p["mixer"], xin)
+            elif spec.mixer == "mamba":
+                o = ssm_mod.mamba_scan(xin, p["mixer"])
+                c = {}
+                if want_cache:
+                    o, c = _mamba_with_state(xin, p["mixer"])
+            elif spec.mixer == "rwkv6":
+                if want_cache:
+                    o, c = _rwkv_with_state(xin, p["mixer"], cfg.rwkv_chunk)
+                else:
+                    o = ssm_mod.rwkv6_chunked(xin, p["mixer"],
+                                              chunk=cfg.rwkv_chunk)
+                    c = {}
+            else:
+                raise ValueError(spec.mixer)
+            if cfg.post_norm:
+                o = _apply_norm(cfg, p["mixer"]["pn1"], o)
+            x = x + o
+            cache["mixer"] = c
+        if spec.cross:
+            xin = _apply_norm(cfg, p["cross"]["normx"], x)
+            x = x + self._cross(p["cross"], xin, xkv)
+        if spec.ffn != "none":
+            xin = _apply_norm(cfg, p["ffn"]["norm2"], x)
+            o = self._ffn(spec, p["ffn"], xin)
+            if cfg.post_norm:
+                o = _apply_norm(cfg, p["ffn"]["pn2"], o)
+            x = x + o
+            if spec.ffn == "rwkv_cm" and want_cache:
+                cache["cm_shift"] = xin[:, -1, :]
+        return x, cache
+
+    def _cross_as_mixer(self, p, xin, xkv):
+        cfg = self.cfg
+        b, s, _ = xin.shape
+        h, hd = cfg.n_heads, cfg.hd
+        q = (xin @ p["wq"]).reshape(b, s, h, hd)
+        k = (xkv["x"] @ p["wk"]).reshape(b, -1, cfg.n_kv_heads, hd)
+        v = (xkv["x"] @ p["wv"]).reshape(b, -1, cfg.n_kv_heads, hd)
+        o = attn_mod.cross_attention(q, k, v)
+        return o.reshape(b, s, h * hd) @ p["wo"]
+
+    def _layer_step(self, spec: LayerSpec, p, x, cache, pos, xkv=None):
+        cfg = self.cfg
+        new_cache = dict(cache)
+        if spec.mixer != "none":
+            xin = _apply_norm(cfg, p["mixer"]["norm1"], x)
+            if spec.mixer == "attn":
+                o, c = self._attn_step(spec, p["mixer"], xin, cache["mixer"], pos)
+            elif spec.mixer == "cross_attn":
+                o = self._cross_as_mixer(p["mixer"], xin, xkv)
+                c = cache["mixer"]
+            elif spec.mixer == "mla":
+                o, c = self._mla_step(p["mixer"], xin, cache["mixer"], pos)
+            elif spec.mixer == "mamba":
+                o2, c = ssm_mod.mamba_step(xin[:, 0, :], cache["mixer"],
+                                           p["mixer"])
+                o = o2[:, None, :]
+            elif spec.mixer == "rwkv6":
+                o2, c = ssm_mod.rwkv6_step(xin[:, 0, :], cache["mixer"],
+                                           p["mixer"])
+                o = o2[:, None, :]
+            else:
+                raise ValueError(spec.mixer)
+            if cfg.post_norm:
+                o = _apply_norm(cfg, p["mixer"]["pn1"], o)
+            x = x + o
+            new_cache["mixer"] = c
+        if spec.cross:
+            xin = _apply_norm(cfg, p["cross"]["normx"], x)
+            x = x + self._cross(p["cross"], xin, xkv)
+        if spec.ffn != "none":
+            xin = _apply_norm(cfg, p["ffn"]["norm2"], x)
+            if spec.ffn == "rwkv_cm":
+                o2, sh = ssm_mod.rwkv_channel_mix_step(
+                    xin[:, 0, :], cache["cm_shift"], p["ffn"])
+                o = o2[:, None, :]
+                new_cache["cm_shift"] = sh
+            else:
+                o = self._ffn(spec, p["ffn"], xin)
+            if cfg.post_norm:
+                o = _apply_norm(cfg, p["ffn"]["pn2"], o)
+            x = x + o
+        return x, new_cache
+
+    # ---- stacks -------------------------------------------------------------
+    def _run_groups(self, params, x, xkv=None, *, want_cache=False):
+        """Scan over cycles; within a cycle, apply each pattern position."""
+        cfg = self.cfg
+        caches = []
+
+        def cycle_body(x, layer_stack):
+            cache_c = []
+            for pi, spec in enumerate(cfg.pattern):
+                x, c = self._layer_full(spec, layer_stack[pi], x, xkv,
+                                        want_cache=want_cache)
+                cache_c.append(c)
+            return x, tuple(cache_c)
+
+        body = cycle_body
+        if cfg.remat == "full":
+            body = jax.checkpoint(cycle_body)
+        elif cfg.remat == "dots":
+            body = jax.checkpoint(
+                cycle_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        def scan_body(x, stacks):
+            return body(x, stacks)
+
+        x, caches = jax.lax.scan(scan_body, x, tuple(params["groups"]))
+        return x, caches
+
+    def _run_groups_step(self, params, x, caches, pos, xkv=None):
+        cfg = self.cfg
+
+        def scan_body(x, stacks_and_cache):
+            stacks, cache_c = stacks_and_cache
+            new_c = []
+            for pi, spec in enumerate(cfg.pattern):
+                x, c = self._layer_step(spec, stacks[pi], x, cache_c[pi], pos,
+                                        xkv)
+                new_c.append(c)
+            return x, tuple(new_c)
+
+        x, new_caches = jax.lax.scan(
+            scan_body, x, (tuple(params["groups"]), caches))
+        return x, new_caches
+
+    # ---- public entry points --------------------------------------------
+    def encode(self, params, frames):
+        """Whisper-style encoder over precomputed frame embeddings."""
+        cfg = self.cfg
+        enc = cfg.encoder
+        x = frames.astype(cfg.np_dtype)
+        spec = LayerSpec(mixer="attn", causal=False, ffn="dense")
+        ecfg = dataclasses.replace(
+            cfg, n_heads=enc.n_heads, n_kv_heads=enc.n_heads, d_ff=enc.d_ff,
+            mlp_kind=enc.mlp_kind, post_norm=False, use_abs_pos=False)
+        em = Model(ecfg)
+
+        def body(x, lp):
+            x, _ = em._layer_full(spec, lp, x, want_cache=False)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+        return _apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+    def embed_tokens(self, params, tokens, pos0=0):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if cfg.emb_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if cfg.use_abs_pos:
+            s = tokens.shape[1]
+            pe = jax.lax.dynamic_slice_in_dim(params["pos_emb"], pos0, s, 0)
+            x = x + pe[None]
+        return x
+
+    def logits(self, params, x):
+        cfg = self.cfg
+        x = _apply_norm(cfg, params["final_norm"], x)
+        # bf16 operands, f32 accumulation (keeps the V-sharded logits matmul
+        # at model precision without doubling HBM traffic)
+        out = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                         preferred_element_type=jnp.float32)
+        return softcap(out, cfg.final_softcap)
+
+    def forward(self, params, tokens, *, extra=None):
+        """Full causal forward → logits (B,S,V). ``extra``: dict with
+        'frames' (enc-dec) or 'images' (VLM cross-attn memory)."""
+        xkv = self._make_xkv(params, extra)
+        x = self.embed_tokens(params, tokens)
+        x, _ = self._run_groups(params, x, xkv)
+        return self.logits(params, x)
+
+    def _make_xkv(self, params, extra):
+        if extra is None:
+            return None
+        if "frames" in extra:
+            enc_out = self.encode(params, extra["frames"])
+            return {"x": enc_out, "enc_out": enc_out}
+        if "images" in extra:
+            img = extra["images"].astype(self.cfg.np_dtype)
+            return {"x": img, "enc_out": img}
+        return None
+
+    def prefill(self, params, tokens, cache_len: int, *, extra=None):
+        """Forward + build decode caches sized ``cache_len``."""
+        cfg = self.cfg
+        xkv = self._make_xkv(params, extra)
+        x = self.embed_tokens(params, tokens)
+        x, caches = self._run_groups(params, x, xkv, want_cache=True)
+        caches = self._pad_caches(caches, tokens.shape[0], tokens.shape[1],
+                                  cache_len)
+        logits = self.logits(params, x[:, -1:, :])
+        return logits, {"layers": caches, "pos": jnp.asarray(tokens.shape[1]),
+                        "xkv": xkv}
+
+    def _pad_caches(self, caches, b, s, cache_len):
+        seq_keys = {"k", "v", "ckv", "kr"}  # sequence-indexed cache leaves
+
+        def fix(path, leaf):
+            if leaf is None:
+                return leaf
+            name = path[-1].key if hasattr(path[-1], "key") else None
+            if name in seq_keys and leaf.ndim >= 3:
+                pad_width = [(0, 0)] * leaf.ndim
+                pad_width[2] = (0, cache_len - s)  # (cyc, B, S, ...)
+                return jnp.pad(leaf, pad_width)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(fix, caches)
+
+    def empty_cache(self, batch: int, cache_len: int, dtype=None):
+        """Zero decode caches (for decode-only dry-runs and serving)."""
+        cfg = self.cfg
+        dt = dtype or cfg.np_dtype
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+        cyc = cfg.n_cycles
+        d_in = cfg.mamba_expand * cfg.d_model
+        caches = []
+        for spec in cfg.pattern:
+            c: dict[str, Any] = {}
+            if spec.mixer == "attn":
+                c["mixer"] = {
+                    "k": jnp.zeros((cyc, batch, cache_len, kvh, hd), dt),
+                    "v": jnp.zeros((cyc, batch, cache_len, kvh, hd), dt)}
+            elif spec.mixer == "cross_attn":
+                c["mixer"] = {}
+            elif spec.mixer == "mla":
+                c["mixer"] = {
+                    "ckv": jnp.zeros((cyc, batch, cache_len, cfg.kv_lora), dt),
+                    "kr": jnp.zeros((cyc, batch, cache_len, cfg.qk_rope_dim), dt)}
+            elif spec.mixer == "mamba":
+                c["mixer"] = {
+                    "conv": jnp.zeros((cyc, batch, cfg.mamba_d_conv - 1, d_in), dt),
+                    "h": jnp.zeros((cyc, batch, d_in, cfg.mamba_d_state),
+                                   jnp.float32)}
+            elif spec.mixer == "rwkv6":
+                hr = cfg.d_model // cfg.rwkv_head_dim
+                c["mixer"] = {
+                    "shift": jnp.zeros((cyc, batch, cfg.d_model), dt),
+                    "s": jnp.zeros((cyc, batch, hr, cfg.rwkv_head_dim,
+                                    cfg.rwkv_head_dim), jnp.float32)}
+            if spec.ffn == "rwkv_cm":
+                c["cm_shift"] = jnp.zeros((cyc, batch, cfg.d_model), dt)
+            caches.append(c)
+        return tuple(caches)
+
+    def decode_step(self, params, tokens, cache, *, extra=None):
+        """One token: tokens (B,1); cache from prefill/empty_cache."""
+        pos = cache["pos"]
+        xkv = cache.get("xkv")
+        if xkv is None and extra is not None:
+            xkv = self._make_xkv(params, extra)
+        x = self.embed_tokens(params, tokens, pos0=pos)
+        x, new_layers = self._run_groups_step(params, x, cache["layers"], pos,
+                                              xkv)
+        logits = self.logits(params, x)
+        return logits, {"layers": new_layers, "pos": pos + 1, "xkv": xkv}
+
+
+def _mamba_with_state(x, p):
+    """mamba_scan + final recurrent state (for prefill→decode handoff)."""
+    y = ssm_mod.mamba_scan(x, p)
+    # recompute final state cheaply via one extra scan pass (correct, simple)
+    xz = x @ p["in_proj"]
+    d_in = xz.shape[-1] // 2
+    xi = xz[..., :d_in]
+    xc = jax.nn.silu(ssm_mod._causal_conv(xi, p["conv_w"], p["conv_b"]))
+    dt, bb, cc = ssm_mod._mamba_gates(xc, p)
+    a = -jnp.exp(p["A_log"])
+
+    def step(h, inp):
+        xc_t, dt_t, b_t = inp
+        da = jnp.exp(dt_t[..., None] * a[None])
+        h = da * h + (dt_t * xc_t)[..., None] * b_t[:, None, :]
+        return h, None
+
+    h0 = jnp.zeros((x.shape[0], d_in, a.shape[1]), jnp.float32)
+    hT, _ = jax.lax.scan(step, h0, (xc.transpose(1, 0, 2).astype(jnp.float32),
+                                    dt.transpose(1, 0, 2).astype(jnp.float32),
+                                    bb.transpose(1, 0, 2).astype(jnp.float32)))
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(xi, ((0, 0), (k - 1, 0), (0, 0)))
+    conv_tail = pad[:, -(k - 1):, :] if k > 1 else pad[:, :0, :]
+    return y, {"conv": conv_tail, "h": hT}
+
+
+def _rwkv_with_state(x, p, chunk):
+    y = ssm_mod.rwkv6_chunked(x, p, chunk=chunk)
+    # final state via scan (reference recurrence, no outputs kept)
+    r, k, v, g, logw = ssm_mod._rwkv_proj(x, ssm_mod._shift(x), p)
+
+    def step(s, inp):
+        k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        s = jnp.exp(w_t)[..., :, None] * s + kv
+        return s, None
+
+    b, sl, h, hd = r.shape
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    sT, _ = jax.lax.scan(step, s0,
+                         tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32)
+                               for t in (k, v, logw)))
+    return y, {"shift": x[:, -1, :], "s": sT}

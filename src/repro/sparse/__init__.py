@@ -1,0 +1,1 @@
+from repro.sparse import io  # noqa: F401

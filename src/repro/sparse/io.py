@@ -1,0 +1,72 @@
+"""Sparse tensor I/O and the paper's dataset profiles.
+
+``read_tns``/``write_tns`` handle the FROSTT ``.tns`` text format (1-based
+coordinates, value last). ``make_profile_tensor`` produces synthetic tensors
+whose shape *ratios* and skew match the paper's four billion-scale datasets
+(Table 3), scaled down so they fit this container; benchmarks parameterize the
+scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.coo import SparseTensor, random_sparse
+
+__all__ = ["read_tns", "write_tns", "DATASET_PROFILES", "make_profile_tensor"]
+
+
+def read_tns(path: str) -> SparseTensor:
+    ind, val = [], []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith(("#", "%")):
+                continue
+            parts = line.split()
+            ind.append([int(p) - 1 for p in parts[:-1]])
+            val.append(float(parts[-1]))
+    ind = np.asarray(ind, np.int64)
+    shape = tuple(int(s) for s in (ind.max(axis=0) + 1))
+    return SparseTensor(ind.astype(np.int32), np.asarray(val, np.float32), shape)
+
+
+def write_tns(path: str, t: SparseTensor) -> None:
+    with open(path, "w") as f:
+        for idx, v in zip(t.indices, t.values):
+            f.write(" ".join(str(int(i) + 1) for i in idx) + f" {float(v)}\n")
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetProfile:
+    """Shape and nnz of a paper dataset (Table 3) plus its skew character."""
+
+    name: str
+    shape: tuple[int, ...]
+    nnz: int
+    distribution: str  # 'uniform' | 'zipf'
+    zipf_a: float = 1.3
+
+
+# Paper Table 3. Twitch is the skewed one (§5.5: popular streamers/games).
+DATASET_PROFILES: dict[str, DatasetProfile] = {
+    "amazon": DatasetProfile("amazon", (4_821_207, 1_774_269, 1_805_187), 1_741_809_018, "zipf", 1.1),
+    "patents": DatasetProfile("patents", (46, 239_172, 239_172), 3_596_640_708, "uniform"),
+    "reddit": DatasetProfile("reddit", (8_211_298, 176_962, 8_116_559), 4_687_474_081, "zipf", 1.05),
+    "twitch": DatasetProfile("twitch", (15_524_309, 6_161_666, 783_865, 6_103, 6_103), 474_676_555, "zipf", 1.4),
+}
+
+
+def make_profile_tensor(name: str, *, scale: float = 1e-3, seed: int = 0) -> SparseTensor:
+    """Synthetic stand-in for a paper dataset, linearly scaled.
+
+    Mode sizes and nnz are multiplied by ``scale`` (min size 8 per mode) so the
+    shape *ratios* — what drives partition balance and communication volume —
+    are preserved while fitting in this container.
+    """
+    p = DATASET_PROFILES[name]
+    shape = tuple(max(8, int(round(s * scale))) for s in p.shape)
+    nnz = max(64, int(round(p.nnz * scale)))
+    return random_sparse(
+        shape, nnz, seed=seed, distribution=p.distribution, zipf_a=p.zipf_a)

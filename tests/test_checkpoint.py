@@ -1,0 +1,72 @@
+import json
+import os
+import numpy as np
+import pytest
+
+from repro.training.checkpoint import CheckpointManager
+
+
+def _payload(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": rng.normal(size=(4, 3)).astype(np.float32),
+                       "b": rng.normal(size=(3,)).astype(np.float32)},
+            "opt": [rng.normal(size=(2,)), rng.normal(size=(2,))],
+            "step": np.asarray(7)}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    p = _payload()
+    mgr.save(3, p)
+    got, step = mgr.restore_latest()
+    assert step == 3
+    np.testing.assert_array_equal(got["params"]["w"], p["params"]["w"])
+    assert isinstance(got["opt"], list) and len(got["opt"]) == 2
+    np.testing.assert_array_equal(got["opt"][1], p["opt"][1])
+
+
+def test_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in range(5):
+        mgr.save(s, _payload(s))
+    assert mgr.steps() == [3, 4]
+
+
+def test_corruption_fallback(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, _payload(1))
+    mgr.save(2, _payload(2))
+    # corrupt latest
+    d = mgr._step_dir(2)
+    victim = next(f for f in os.listdir(d) if f.endswith(".npy"))
+    with open(os.path.join(d, victim), "wb") as f:
+        f.write(b"garbage")
+    got, step = mgr.restore_latest()
+    assert step == 1  # fell back past the corrupted checkpoint
+    np.testing.assert_array_equal(got["params"]["w"], _payload(1)["params"]["w"])
+
+
+def test_partial_write_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _payload(1))
+    # simulate a crash mid-save: tmp dir left behind, no manifest rename
+    os.makedirs(os.path.join(str(tmp_path), "step_0000000009.tmp"))
+    got, step = mgr.restore_latest()
+    assert step == 1
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(1, _payload(1), block=False)
+    mgr.wait()
+    assert mgr.steps() == [1]
+    got, _ = mgr.restore_latest()
+    np.testing.assert_array_equal(got["params"]["b"], _payload(1)["params"]["b"])
+
+
+def test_manifest_integrity_recorded(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(4, _payload())
+    man = json.load(open(os.path.join(mgr._step_dir(4), "manifest.json")))
+    assert man["step"] == 4
+    assert all("sha256" in v for v in man["arrays"].values())

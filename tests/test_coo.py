@@ -1,0 +1,81 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coo import SparseTensor, from_dense, random_sparse, to_dense
+from repro.sparse.io import (DATASET_PROFILES, make_profile_tensor, read_tns,
+                             write_tns)
+
+
+def test_basic_container():
+    t = random_sparse((10, 8, 6), 50, seed=0)
+    assert t.nmodes == 3
+    assert t.indices.dtype == np.int32
+    assert t.values.dtype == np.float32
+    assert (t.indices >= 0).all()
+    assert (t.indices < np.array(t.shape)).all()
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        SparseTensor(np.zeros((3, 2), np.int32), np.zeros(2, np.float32), (5, 5))
+    with pytest.raises(ValueError):
+        SparseTensor(np.array([[9, 0]], np.int32), np.ones(1, np.float32), (5, 5))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_dense_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((6, 5, 4)) < 0.3) * rng.normal(size=(6, 5, 4))
+    dense = dense.astype(np.float32)
+    t = from_dense(dense)
+    np.testing.assert_allclose(to_dense(t), dense, rtol=1e-6)
+
+
+def test_dedup_accumulates():
+    ind = np.array([[1, 2], [1, 2], [0, 0]], np.int32)
+    val = np.array([1.0, 2.5, -1.0], np.float32)
+    t = SparseTensor(ind, val, (3, 3)).deduplicated()
+    assert t.nnz == 2
+    d = to_dense(t)
+    assert d[1, 2] == pytest.approx(3.5)
+    assert d[0, 0] == pytest.approx(-1.0)
+
+
+def test_mode_histogram_counts():
+    t = random_sparse((12, 9, 7), 200, seed=3)
+    for m in range(3):
+        h = t.mode_histogram(m)
+        assert h.sum() == t.nnz
+        assert h.shape == (t.shape[m],)
+
+
+def test_sorted_by_mode():
+    t = random_sparse((12, 9, 7), 200, seed=4)
+    s = t.sorted_by_mode(1)
+    assert (np.diff(s.indices[:, 1]) >= 0).all()
+    # same multiset of nonzeros
+    assert sorted(map(tuple, np.c_[t.indices, t.values].tolist())) == \
+        sorted(map(tuple, np.c_[s.indices, s.values].tolist()))
+
+
+def test_tns_roundtrip(tmp_path):
+    t = random_sparse((9, 8, 7, 6, 5), 100, seed=5)
+    p = str(tmp_path / "x.tns")
+    write_tns(p, t)
+    t2 = read_tns(p)
+    d1, d2 = to_dense(t), to_dense(t2)
+    # shapes may shrink to max index; embed into the larger one
+    assert d2.shape <= d1.shape
+    np.testing.assert_allclose(d1[tuple(slice(0, s) for s in d2.shape)], d2,
+                               atol=1e-5)
+
+
+def test_profiles_scaled():
+    for name, prof in DATASET_PROFILES.items():
+        t = make_profile_tensor(name, scale=2e-6, seed=1)
+        assert t.nmodes == len(prof.shape)
+        assert t.nnz > 0
+    tw = make_profile_tensor("twitch", scale=1e-5)
+    assert tw.nmodes == 5  # twitch is the 5-mode tensor

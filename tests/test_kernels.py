@@ -1,0 +1,118 @@
+"""Pallas EC kernel vs pure-jnp oracle: shape/dtype sweeps + hypothesis."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.mttkrp_pallas import ec_blocked
+from repro.kernels.ref import ec_rows_ref
+from repro.kernels import ops as kops
+
+
+def _mk(nblocks, tile, n_tiles, p, r, nin, seed, dtype=np.float32,
+        monotone=True):
+    rng = np.random.default_rng(seed)
+    nnz = nblocks * p
+    # monotone block→tile map (kernel contract: revisits are consecutive)
+    if monotone:
+        b2t = np.sort(rng.integers(0, n_tiles, size=nblocks))
+    else:
+        b2t = rng.integers(0, n_tiles, size=nblocks)
+    rows_in_tile = rng.integers(0, tile, size=nnz)
+    vals = rng.normal(size=nnz).astype(dtype)
+    vals[rng.random(nnz) < 0.2] = 0.0  # padding-like entries
+    gathered = [rng.normal(size=(nnz, r)).astype(dtype) for _ in range(nin)]
+    return b2t.astype(np.int32), rows_in_tile.astype(np.int32), vals, gathered
+
+
+def _oracle(b2t, rows_in_tile, vals, gathered, tile, n_tiles, p):
+    glob = np.repeat(b2t, p) * tile + rows_in_tile
+    out = ec_rows_ref(jnp.asarray(vals),
+                      [jnp.asarray(g) for g in gathered],
+                      jnp.asarray(glob.astype(np.int32)), n_tiles * tile)
+    return np.asarray(out)
+
+
+@pytest.mark.parametrize("tile,p,r,nin", [
+    (8, 16, 8, 1), (8, 32, 16, 2), (16, 64, 32, 2), (8, 128, 32, 4),
+    (32, 32, 64, 3),
+])
+def test_kernel_shape_sweep(tile, p, r, nin):
+    nblocks, n_tiles = 7, 5
+    b2t, rit, vals, gathered = _mk(nblocks, tile, n_tiles, p, r, nin, seed=1)
+    out = ec_blocked(jnp.asarray(vals), jnp.asarray(rit), jnp.asarray(b2t),
+                     [jnp.asarray(g) for g in gathered],
+                     num_rows=n_tiles * tile, tile=tile, block_p=p,
+                     interpret=True)
+    # mask unvisited tiles like ops.mttkrp_local does
+    visited = np.zeros(n_tiles, np.float32)
+    visited[b2t] = 1
+    got = np.asarray(out) * np.repeat(visited, tile)[:, None]
+    got = np.nan_to_num(got, nan=0.0)
+    ref = _oracle(b2t, rit, vals, gathered, tile, n_tiles, p)
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    tile, p, r = 8, 32, 16
+    nblocks, n_tiles = 4, 3
+    b2t, rit, vals, gathered = _mk(nblocks, tile, n_tiles, p, r, 2, seed=2)
+    vals_d = jnp.asarray(vals).astype(dtype)
+    gath_d = [jnp.asarray(g).astype(dtype) for g in gathered]
+    out = ec_blocked(vals_d, jnp.asarray(rit), jnp.asarray(b2t), gath_d,
+                     num_rows=n_tiles * tile, tile=tile, block_p=p,
+                     interpret=True)
+    assert out.dtype == jnp.float32  # f32 accumulation regardless of input
+    visited = np.zeros(n_tiles, np.float32)
+    visited[b2t] = 1
+    got = np.nan_to_num(np.asarray(out) * np.repeat(visited, tile)[:, None])
+    ref = _oracle(b2t, rit, np.asarray(vals_d, np.float32),
+                  [np.asarray(g, np.float32) for g in gath_d],
+                  tile, n_tiles, p)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(got, ref, rtol=tol, atol=tol)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 6), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_kernel_property(seed, nblocks, n_tiles):
+    tile, p, r = 8, 16, 8
+    b2t, rit, vals, gathered = _mk(nblocks, tile, n_tiles, p, r, 2, seed=seed)
+    out = ec_blocked(jnp.asarray(vals), jnp.asarray(rit), jnp.asarray(b2t),
+                     [jnp.asarray(g) for g in gathered],
+                     num_rows=n_tiles * tile, tile=tile, block_p=p,
+                     interpret=True)
+    visited = np.zeros(n_tiles, np.float32)
+    visited[b2t] = 1
+    got = np.nan_to_num(np.asarray(out) * np.repeat(visited, tile)[:, None])
+    ref = _oracle(b2t, rit, vals, gathered, tile, n_tiles, p)
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ops_wrapper_matches_ref(small_tensor):
+    """mttkrp_local kernel path == jnp path on real partition arrays."""
+    from repro.core.partition import partition_mode
+    t = small_tensor
+    part, g2p, _ = partition_mode(t, 1, 1, strategy="amped_cdf",
+                                  replication=1)
+    rng = np.random.default_rng(0)
+    factors = [jnp.asarray(rng.normal(size=(t.shape[w], 16)).astype(np.float32))
+               for w in range(3)]
+    # single device → indices untranslated == global
+    kw = dict(mode=1, num_rows=part.rows_max, tile=part.tile,
+              block_p=part.block_p)
+    a = kops.mttkrp_local(jnp.asarray(part.indices[0]),
+                          jnp.asarray(part.values[0]),
+                          jnp.asarray(part.local_rows[0]),
+                          jnp.asarray(part.block_to_tile[0]), factors,
+                          use_kernel=True, interpret=True,
+                          tile_mask=jnp.asarray(part.tile_visited[0]), **kw)
+    b = kops.mttkrp_local(jnp.asarray(part.indices[0]),
+                          jnp.asarray(part.values[0]),
+                          jnp.asarray(part.local_rows[0]),
+                          jnp.asarray(part.block_to_tile[0]), factors,
+                          use_kernel=False, **kw)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=2e-4)

@@ -1,0 +1,144 @@
+"""Model-family behaviour: forward shapes, causality, prefill/decode
+equivalence, chunked-vs-scan SSM equality."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (EncoderConfig, LayerSpec, Model,
+                                      ModelConfig)
+
+BASE = dict(d_model=32, n_layers=2, n_heads=4, n_kv_heads=2, d_ff=64,
+            vocab=97, dtype="float32", attn_chunk=8, rwkv_chunk=4)
+
+
+def _mk(name, **kw):
+    return ModelConfig(name=name, **{**BASE, **kw})
+
+
+CASES = {
+    "gqa": _mk("gqa"),
+    "local_softcap": _mk("ls", pattern=(LayerSpec(window=6, attn_softcap=30.0),)),
+    "moe": _mk("moe", pattern=(LayerSpec(ffn="moe"),), n_experts=4, topk=2,
+               moe_d_ff=32, capacity_factor=64.0),
+    "mla": _mk("mla", pattern=(LayerSpec(mixer="mla"),), kv_lora=16,
+               qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8),
+    "mamba": _mk("mamba", pattern=(LayerSpec(mixer="mamba"),)),
+    "rwkv6": _mk("rwkv6", pattern=(LayerSpec(mixer="rwkv6", ffn="rwkv_cm"),),
+                 rwkv_head_dim=8),
+}
+
+
+@pytest.mark.parametrize("name", list(CASES))
+def test_prefill_decode_equivalence(name):
+    cfg = CASES[name]
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full = np.asarray(m.forward(params, toks))
+    assert full.shape == (B, S, cfg.vocab)
+    assert not np.isnan(full).any()
+    s0 = S - 3
+    lg, cache = m.prefill(params, toks[:, :s0], cache_len=S)
+    errs = [np.abs(np.asarray(lg[:, -1]) - full[:, s0 - 1]).max()]
+    for i in range(3):
+        lg, cache = m.decode_step(params, toks[:, s0 + i:s0 + i + 1], cache)
+        errs.append(np.abs(np.asarray(lg[:, 0]) - full[:, s0 + i]).max())
+    rel = max(errs) / max(1.0, np.abs(full).max())
+    assert rel < 2e-2, (name, errs)
+
+
+def test_causality():
+    """Future tokens must not affect past logits."""
+    cfg = CASES["gqa"]
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 10), 0, cfg.vocab)
+    base = np.asarray(m.forward(params, toks))
+    toks2 = toks.at[0, 7].set((toks[0, 7] + 1) % cfg.vocab)
+    pert = np.asarray(m.forward(params, toks2))
+    np.testing.assert_allclose(base[:, :7], pert[:, :7], atol=1e-5)
+    assert np.abs(base[:, 7:] - pert[:, 7:]).max() > 1e-6
+
+
+def test_local_window_restricts_context():
+    """With window w, logits at t depend only on tokens in (t-w, t]."""
+    cfg = _mk("win", n_layers=1, pattern=(LayerSpec(window=3),))
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0, cfg.vocab)
+    base = np.asarray(m.forward(params, toks))
+    # perturb token 2: positions >= 2+3 see no difference (1 layer, window 3)
+    toks2 = toks.at[0, 2].set((toks[0, 2] + 1) % cfg.vocab)
+    pert = np.asarray(m.forward(params, toks2))
+    np.testing.assert_allclose(base[:, 5:], pert[:, 5:], atol=1e-5)
+    assert np.abs(base[:, 2] - pert[:, 2]).max() > 1e-6
+
+
+def test_rwkv_chunked_equals_scan():
+    from repro.models import ssm
+    rng = np.random.default_rng(0)
+    d, hd = 16, 4
+    cfg = _mk("r", d_model=d, pattern=(LayerSpec(mixer="rwkv6"),),
+              rwkv_head_dim=hd)
+    p = Model(cfg).init(jax.random.PRNGKey(0))
+    lp = jax.tree.map(lambda x: x[0], p["groups"][0])["mixer"]
+    x = jnp.asarray(rng.normal(size=(2, 24, d)).astype(np.float32))
+    a = ssm.rwkv6_scan(x, lp)
+    for chunk in (1, 4, 6, 24):
+        b = ssm.rwkv6_chunked(x, lp, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                                   atol=2e-3)
+
+
+def test_mamba_scan_step_consistency():
+    from repro.models import ssm
+    rng = np.random.default_rng(1)
+    d = 16
+    cfg = _mk("m", d_model=d, pattern=(LayerSpec(mixer="mamba"),))
+    p = Model(cfg).init(jax.random.PRNGKey(0))
+    lp = jax.tree.map(lambda x: x[0], p["groups"][0])["mixer"]
+    x = jnp.asarray(rng.normal(size=(2, 10, d)).astype(np.float32))
+    full = np.asarray(ssm.mamba_scan(x, lp))
+    d_in = 2 * d
+    state = {"conv": jnp.zeros((2, 3, d_in)), "h": jnp.zeros((2, d_in, 16))}
+    outs = []
+    for t in range(10):
+        y, state = ssm.mamba_step(x[:, t, :], state, lp)
+        outs.append(np.asarray(y))
+    step = np.stack(outs, axis=1)
+    np.testing.assert_allclose(full, step, rtol=1e-4, atol=1e-4)
+
+
+def test_moe_dispatch_equivalence():
+    """sort- and scatter-dispatch == dense oracle when capacity is ample."""
+    from repro.models import ffn
+    rng = np.random.default_rng(2)
+    t, d, e, f = 24, 16, 4, 32
+    x = jnp.asarray(rng.normal(size=(t, d)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    p = {"router": jnp.asarray(rng.normal(size=(d, e)).astype(np.float32)),
+         "w1": jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32)) * 0.1,
+         "w3": jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32)) * 0.1,
+         "w2": jnp.asarray(rng.normal(size=(e, f, d)).astype(np.float32)) * 0.1}
+    ref = np.asarray(ffn.moe_ref_dense(x, p, topk=2))
+    for disp in ("sort", "scatter"):
+        got, aux = ffn.moe(x, p, topk=2, capacity_factor=float(e),
+                           dispatch=disp)
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-4, atol=1e-4)
+        assert float(aux["load"].sum()) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    from repro.models import ffn
+    rng = np.random.default_rng(3)
+    t, d, e, f = 32, 8, 4, 16
+    x = jnp.asarray(rng.normal(size=(t, d)).astype(np.float32))
+    p = {"router": jnp.zeros((d, e)),  # uniform router → ties → congestion
+         "w1": jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32)),
+         "w3": jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32)),
+         "w2": jnp.asarray(rng.normal(size=(e, f, d)).astype(np.float32))}
+    tight, _ = ffn.moe(x, p, topk=2, capacity_factor=0.25, dispatch="sort")
+    ample, _ = ffn.moe(x, p, topk=2, capacity_factor=8.0, dispatch="sort")
+    assert np.abs(np.asarray(tight) - np.asarray(ample)).max() > 1e-6

@@ -1,0 +1,115 @@
+"""Distributed MTTKRP + CP-ALS on a 1-device mesh (multi-device semantics
+are covered in test_multidevice.py via subprocess)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import mttkrp as dm
+from repro.core.coo import from_dense, random_sparse, to_dense
+from repro.core.decompose import cp_decompose
+from repro.core.partition import build_plan
+from repro.kernels.ref import mttkrp_dense_ref
+
+
+def _padded_factors(plan, t, rank, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for w in range(t.nmodes):
+        f = np.zeros((plan.modes[w].padded_rows, rank), np.float32)
+        f[plan.global_to_padded[w]] = rng.normal(
+            size=(t.shape[w], rank)).astype(np.float32)
+        out.append(jnp.asarray(f))
+    return out
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_distributed_mttkrp_matches_dense(small_tensor, mode, use_kernel):
+    t = small_tensor
+    plan = build_plan(t, 1)
+    mesh = dm.cp_mesh(1, 1)
+    factors = _padded_factors(plan, t, 16)
+    dev = dm.shard_plan_mode(plan.modes[mode], mesh)
+    out = dm.distributed_mttkrp(plan, mode, mesh, dev, factors,
+                                use_kernel=use_kernel, ring=False)
+    f_glob = [jnp.asarray(np.asarray(f)[plan.global_to_padded[w]])
+              for w, f in enumerate(factors)]
+    ref = mttkrp_dense_ref(jnp.asarray(to_dense(t)), f_glob, mode)
+    got = np.asarray(out)[plan.global_to_padded[mode]]
+    np.testing.assert_allclose(got, np.asarray(ref), rtol=5e-4, atol=5e-4)
+
+
+def test_mttkrp_4mode(small_tensor_4mode):
+    t = small_tensor_4mode
+    plan = build_plan(t, 1)
+    mesh = dm.cp_mesh(1, 1)
+    factors = _padded_factors(plan, t, 8)
+    for mode in range(4):
+        dev = dm.shard_plan_mode(plan.modes[mode], mesh)
+        out = dm.distributed_mttkrp(plan, mode, mesh, dev, factors)
+        f_glob = [jnp.asarray(np.asarray(f)[plan.global_to_padded[w]])
+                  for w, f in enumerate(factors)]
+        ref = mttkrp_dense_ref(jnp.asarray(to_dense(t)), f_glob, mode)
+        got = np.asarray(out)[plan.global_to_padded[mode]]
+        np.testing.assert_allclose(got, np.asarray(ref), rtol=5e-4, atol=5e-4)
+
+
+def test_als_fit_monotone(small_tensor):
+    res = cp_decompose(small_tensor, rank=8, num_devices=1, iters=5, tol=0)
+    fits = np.asarray(res.fits)
+    assert len(fits) == 5
+    assert (np.diff(fits) > -1e-4).all(), fits  # non-decreasing (tol for fp)
+
+
+def test_als_exact_recovery():
+    rng = np.random.default_rng(0)
+    a = rng.uniform(0.2, 1, (20, 3))
+    b = rng.uniform(0.2, 1, (15, 3))
+    c = rng.uniform(0.2, 1, (10, 3))
+    t = from_dense(np.einsum("ir,jr,kr->ijk", a, b, c).astype(np.float32))
+    res = cp_decompose(t, rank=3, num_devices=1, iters=40, tol=1e-9)
+    assert res.fits[-1] > 0.99, res.fits[-1]
+    # reconstruction at nonzero coordinates matches
+    recon = res.reconstruct_at(t.indices)
+    rel = np.abs(recon - t.values).max() / np.abs(t.values).max()
+    assert rel < 0.1
+
+
+def test_decompose_resume(small_tensor, tmp_path):
+    kw = dict(rank=4, num_devices=1, iters=4, tol=0, seed=3)
+    r_full = cp_decompose(small_tensor, **kw,
+                          checkpoint_dir=str(tmp_path / "a"))
+    cp_decompose(small_tensor, **{**kw, "iters": 2},
+                 checkpoint_dir=str(tmp_path / "b"))
+    r_resumed = cp_decompose(small_tensor, **kw,
+                             checkpoint_dir=str(tmp_path / "b"), resume=True)
+    np.testing.assert_allclose(r_full.fits, r_resumed.fits, atol=1e-6)
+    for f1, f2 in zip(r_full.factors, r_resumed.factors):
+        np.testing.assert_allclose(f1, f2, atol=1e-5)
+
+
+def test_streamer_prefetch(small_tensor):
+    from repro.sparse.stream import ShardStreamer
+    plan = build_plan(small_tensor, 1)
+    mesh = dm.cp_mesh(1, 1)
+    s = ShardStreamer(plan, mesh, prefetch=1)
+    d0 = s.get(0)
+    assert 1 in s._resident  # next mode prefetched
+    s.get(1)
+    s.get(2)
+    assert len(s._resident) <= 2  # eviction keeps prefetch+1 resident
+    assert d0.values.shape[-1] == plan.modes[0].nnz_max
+
+
+def test_blco_streaming_baseline(small_tensor):
+    from repro.core.baselines import blco_like_streaming
+    t = small_tensor
+    rng = np.random.default_rng(0)
+    factors = [jnp.asarray(rng.normal(size=(t.shape[w], 8)).astype(np.float32))
+               for w in range(3)]
+    out, times = blco_like_streaming(t, factors, 1, chunk=128)
+    ref = mttkrp_dense_ref(jnp.asarray(to_dense(t)), factors, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=5e-4,
+                               atol=5e-4)
+    assert times["chunks"] == -(-t.nnz // 128)

@@ -1,0 +1,145 @@
+"""Multi-device integration: one subprocess with 8 virtual CPU devices runs
+the full distributed battery (ring == all_gather, AMPED vs equal-nnz vs
+oracle, r>1 merges, ALS convergence, gradient-compression psum). Subprocess
+keeps the main test env at 1 device per the dry-run isolation rule."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.coo import random_sparse, to_dense
+from repro.core.partition import build_plan
+from repro.core import mttkrp as M
+from repro.core import exchange
+from repro.kernels.ref import mttkrp_dense_ref
+from jax.sharding import Mesh, PartitionSpec as P
+
+results = {}
+assert jax.device_count() == 8, jax.device_count()
+
+# --- ring all-gather == lax.all_gather over a 2D (4,2) mesh -------------
+mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("group", "sub"))
+x = jnp.arange(8 * 3 * 5, dtype=jnp.float32).reshape(24, 5)
+
+def ring_fn(x):
+    return exchange.ring_all_gather(x, ("group", "sub"))
+
+def ag_fn(x):
+    return exchange.all_gather_axes(x, ("group", "sub"), ring=False)
+
+ring = jax.jit(jax.shard_map(ring_fn, mesh=mesh, in_specs=P(("group", "sub")),
+                             out_specs=P(None), check_vma=False))(x)
+ag = jax.jit(jax.shard_map(ag_fn, mesh=mesh, in_specs=P(("group", "sub")),
+                           out_specs=P(None), check_vma=False))(x)
+results["ring_equals_allgather"] = bool(np.allclose(ring, ag))
+results["ring_equals_input"] = bool(np.allclose(ring, x))
+
+# --- distributed MTTKRP across strategies vs dense oracle ---------------
+t = random_sparse((50, 37, 24), 800, seed=1, distribution="zipf")
+dense = to_dense(t)
+R = 16
+ok = True
+for strategy, repl in (("amped_cdf", None), ("amped_cdf", 4),
+                       ("equal_nnz", None), ("amped_lpt", None)):
+    plan = build_plan(t, 8, strategy=strategy, replication=repl)
+    for mode in range(3):
+        part = plan.modes[mode]
+        cmesh = M.cp_mesh(8, part.r)
+        rng = np.random.default_rng(0)
+        factors = []
+        for w in range(3):
+            f = np.zeros((plan.modes[w].padded_rows, R), np.float32)
+            f[plan.global_to_padded[w]] = rng.normal(
+                size=(t.shape[w], R)).astype(np.float32)
+            factors.append(jnp.asarray(f))
+        dev = M.shard_plan_mode(part, cmesh)
+        out = M.distributed_mttkrp(plan, mode, cmesh, dev, factors,
+                                   use_kernel=False, ring=True)
+        f_glob = [jnp.asarray(np.asarray(f)[plan.global_to_padded[w]])
+                  for w, f in enumerate(factors)]
+        ref = np.asarray(mttkrp_dense_ref(jnp.asarray(dense), f_glob, mode))
+        got = np.asarray(out)[plan.global_to_padded[mode]]
+        err = np.abs(got - ref).max() / max(np.abs(ref).max(), 1e-6)
+        ok = ok and err < 5e-4
+results["mttkrp_all_strategies"] = bool(ok)
+
+# --- kernel path on 8 devices -------------------------------------------
+plan = build_plan(t, 8)
+part = plan.modes[0]
+cmesh = M.cp_mesh(8, part.r)
+rng = np.random.default_rng(0)
+factors = []
+for w in range(3):
+    f = np.zeros((plan.modes[w].padded_rows, R), np.float32)
+    f[plan.global_to_padded[w]] = rng.normal(size=(t.shape[w], R)).astype(np.float32)
+    factors.append(jnp.asarray(f))
+dev = M.shard_plan_mode(part, cmesh)
+k_out = M.distributed_mttkrp(plan, 0, cmesh, dev, factors, use_kernel=True)
+j_out = M.distributed_mttkrp(plan, 0, cmesh, dev, factors, use_kernel=False)
+results["kernel_matches_jnp_8dev"] = bool(
+    np.allclose(np.asarray(k_out), np.asarray(j_out), atol=2e-3))
+
+# --- ALS converges on 8 devices ------------------------------------------
+from repro.core.decompose import cp_decompose
+res = cp_decompose(t, rank=8, num_devices=8, iters=4, tol=0)
+results["als_fits"] = res.fits
+results["als_monotone"] = bool(all(
+    b >= a - 1e-4 for a, b in zip(res.fits, res.fits[1:])))
+
+# --- elastic restart: 4 devices -> checkpoint -> resume on 8 --------------
+import tempfile
+ck = tempfile.mkdtemp()
+r4 = cp_decompose(t, rank=6, num_devices=4, iters=3, tol=0, seed=5,
+                  checkpoint_dir=ck)
+r8 = cp_decompose(t, rank=6, num_devices=8, iters=6, tol=0, seed=5,
+                  checkpoint_dir=ck, resume=True)
+results["elastic_fits"] = r4.fits + r8.fits[len(r4.fits):]
+results["elastic_resumed"] = bool(len(r8.fits) == 6 and
+                                  r8.fits[3] >= r4.fits[-1] - 1e-3)
+
+# --- compressed psum across 8 devices ------------------------------------
+from repro.training.compression import compressed_psum_tree
+dmesh = Mesh(np.asarray(jax.devices()), ("data",))
+gs = jnp.asarray(np.random.default_rng(3).normal(size=(8, 128)).astype(np.float32))
+
+def comp(g, r):
+    out, res = compressed_psum_tree({"w": g.reshape(128)},
+                                    {"w": r.reshape(128)}, "data")
+    return out["w"], res["w"]
+
+out, _ = jax.jit(jax.shard_map(comp, mesh=dmesh,
+                               in_specs=(P("data"), P("data")),
+                               out_specs=(P(), P("data")),
+                               check_vma=False))(gs, jnp.zeros_like(gs))
+true_mean = np.asarray(gs).mean(0)
+rel = np.abs(np.asarray(out) - true_mean).max() / np.abs(true_mean).max()
+results["compressed_psum_rel_err"] = float(rel)
+results["compressed_psum_ok"] = bool(rel < 0.08)
+
+print("RESULTS_JSON:" + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_multidevice_battery():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1500)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = next(l for l in proc.stdout.splitlines()
+                if l.startswith("RESULTS_JSON:"))
+    results = json.loads(line[len("RESULTS_JSON:"):])
+    assert results["ring_equals_allgather"]
+    assert results["ring_equals_input"]
+    assert results["mttkrp_all_strategies"]
+    assert results["kernel_matches_jnp_8dev"]
+    assert results["als_monotone"], results["als_fits"]
+    assert results["elastic_resumed"], results["elastic_fits"]
+    assert results["compressed_psum_ok"], results["compressed_psum_rel_err"]

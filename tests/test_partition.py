@@ -1,0 +1,146 @@
+"""Property tests for the AMPED partitioning invariants (paper §3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coo import random_sparse
+from repro.core.partition import (auto_replication, build_plan,
+                                  partition_mode)
+
+STRATEGIES = ["amped_cdf", "amped_lpt", "uniform_index", "equal_nnz"]
+
+
+def _nonzero_multiset(part):
+    """(original indices, value) pairs of all non-padding entries."""
+    out = []
+    mask = part.values != 0
+    for d in range(part.num_devices):
+        for k in np.nonzero(mask[d])[0]:
+            out.append((tuple(part.indices[d, k]), float(part.values[d, k])))
+    return sorted(out)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_exact_cover(small_tensor, strategy):
+    """Every nonzero lands on exactly one device (paper: task-independent
+    partitions)."""
+    t = small_tensor
+    part, g2p, _ = partition_mode(t, 0, 8, strategy=strategy)
+    got = _nonzero_multiset(part)
+    want = sorted((tuple(i), float(v)) for i, v in zip(t.indices, t.values)
+                  if v != 0)
+    assert got == want
+
+
+@pytest.mark.parametrize("strategy", ["amped_cdf", "amped_lpt", "uniform_index"])
+def test_output_rows_disjoint_across_groups(small_tensor, strategy):
+    """The AMPED invariant: all nonzeros with the same output index live in
+    the same group → no cross-group write conflicts."""
+    t = small_tensor
+    for mode in range(t.nmodes):
+        part, g2p, p2g = partition_mode(t, mode, 8, strategy=strategy)
+        r = part.r
+        owner_of_index = {}
+        mask = part.values != 0
+        for dev in range(part.num_devices):
+            g = dev // r
+            for k in np.nonzero(mask[dev])[0]:
+                oi = int(part.indices[dev, k, mode])
+                assert owner_of_index.setdefault(oi, g) == g
+
+
+def test_local_rows_consistent(small_tensor):
+    """local_row + group offset == padded row of the output index."""
+    t = small_tensor
+    part, g2p, _ = partition_mode(t, 1, 8, strategy="amped_cdf")
+    mask = part.values != 0
+    for dev in range(8):
+        g = dev // part.r
+        for k in np.nonzero(mask[dev])[0]:
+            oi = int(part.indices[dev, k, 1])
+            assert g2p[oi] == g * part.rows_max + part.local_rows[dev, k]
+
+
+def test_blocks_tile_coherent(small_tensor):
+    """No kernel block straddles an output row tile (kernel precondition)."""
+    t = small_tensor
+    for strategy in STRATEGIES:
+        part, _, _ = partition_mode(t, 0, 8, strategy=strategy)
+        p, tile = part.block_p, part.tile
+        for dev in range(8):
+            tiles = part.local_rows[dev] // tile
+            blk = np.arange(part.nnz_max) // p
+            for b in range(part.nblocks):
+                sel = tiles[blk == b]
+                assert (sel == part.block_to_tile[dev, b]).all()
+
+
+def test_padding_is_noop(small_tensor):
+    part, _, _ = partition_mode(small_tensor, 2, 8)
+    mask = part.values == 0
+    assert mask.sum() > 0  # padding exists
+    # padded entries have local rows inside the block's tile (checked above)
+    # and contribute value 0 — nothing else to assert structurally
+
+
+def test_equal_nnz_balances_perfectly(small_tensor):
+    part, _, _ = partition_mode(small_tensor, 0, 8, strategy="equal_nnz")
+    stats = part.balance_stats()
+    assert stats["nnz_max"] - stats["nnz_min"] <= 1
+    assert part.r == 8
+
+
+def test_cdf_beats_uniform_on_skew():
+    t = random_sparse((100, 50, 40), 3000, seed=11, distribution="zipf",
+                      zipf_a=1.2)
+    cdf, _, _ = partition_mode(t, 0, 8, strategy="amped_cdf", replication=1)
+    uni, _, _ = partition_mode(t, 0, 8, strategy="uniform_index",
+                               replication=1)
+    # paper Fig. 6 mechanism: CDF split balances what uniform index ranges
+    # cannot on skewed tensors
+    assert cdf.balance_stats()["nnz_max"] <= uni.balance_stats()["nnz_max"]
+
+
+def test_auto_replication_rules():
+    # tiny mode (Patents mode 0: 46 indices, 256 devices) → r grows
+    hist = np.ones(46, np.int64) * 1000
+    r = auto_replication(hist, 256)
+    assert 256 // r <= 46
+    # single hot index → r grows to split it
+    hist = np.ones(1000, np.int64)
+    hist[0] = 100_000
+    r = auto_replication(hist, 8)
+    assert r >= 4
+    # uniform big mode → r == 1 (paper scheme)
+    assert auto_replication(np.ones(10_000, np.int64), 8) == 1
+
+
+@given(st.integers(0, 10_000), st.sampled_from(STRATEGIES),
+       st.sampled_from([1, 2, 4]))
+@settings(max_examples=15, deadline=None)
+def test_plan_cover_property(seed, strategy, repl):
+    t = random_sparse((23, 17, 11), 150, seed=seed)
+    if strategy == "equal_nnz":
+        repl = None
+    plan = build_plan(t, 4, strategy=strategy, replication=repl)
+    for mode in range(3):
+        part = plan.modes[mode]
+        mask = part.values != 0
+        assert mask.sum() == np.count_nonzero(t.values)
+        # translated output indices land in the owning group's padded range
+        g2p = plan.global_to_padded[mode]
+        for dev in range(4):
+            g = dev // part.r
+            rows = part.indices[dev][mask[dev]][:, mode]
+            assert ((rows >= g * part.rows_max) &
+                    (rows < (g + 1) * part.rows_max)).all()
+
+
+def test_padded_to_global_inverse(small_tensor):
+    plan = build_plan(small_tensor, 8)
+    for w in range(3):
+        g2p, p2g = plan.global_to_padded[w], plan.padded_to_global[w]
+        idx = np.arange(small_tensor.shape[w])
+        assert (p2g[g2p[idx]] == idx).all()
+        pad_rows = p2g < 0
+        assert pad_rows.sum() == p2g.size - idx.size

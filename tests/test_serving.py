@@ -1,0 +1,66 @@
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.transformer import Model
+from repro.serving.serve import cache_specs, generate
+
+
+def test_generate_greedy_deterministic():
+    cfg = get_config("granite_8b", "smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    out1 = np.asarray(generate(m, params, prompt, steps=5, cache_len=16))
+    out2 = np.asarray(generate(m, params, prompt, steps=5, cache_len=16))
+    assert out1.shape == (2, 5)
+    np.testing.assert_array_equal(out1, out2)
+    assert (out1 >= 0).all() and (out1 < cfg.vocab).all()
+
+
+def test_generate_matches_forward_argmax():
+    """First generated token == argmax of the forward logits at the last
+    prompt position."""
+    cfg = get_config("granite_8b", "smoke")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab)
+    full = m.forward(params, prompt)
+    want = int(jnp.argmax(full[0, -1]))
+    out = np.asarray(generate(m, params, prompt, steps=1, cache_len=12))
+    assert out[0, 0] == want
+
+
+def test_cache_specs_structure_matches_cache():
+    """Spec tree must be a prefix-match of the real cache pytree."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    for arch in ("granite_8b", "jamba15_large", "deepseek_v2_lite",
+                 "rwkv6_7b", "whisper_small"):
+        cfg = get_config(arch, "smoke")
+        m = Model(cfg)
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        specs = cache_specs(m, mesh, batch=2)
+        cache = m.empty_cache(2, 8)
+        # same tree structure for the layers part
+        a = jax.tree_util.tree_structure(
+            specs["layers"], is_leaf=lambda x: isinstance(x, P))
+        b = jax.tree_util.tree_structure(cache)
+        assert a == b, (arch, a, b)
+
+
+def test_seq_shard_layout_flag():
+    from jax.sharding import Mesh, PartitionSpec as P
+    cfg = get_config("granite_8b", "smoke")
+    m = Model(cfg)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    auto = cache_specs(m, mesh, batch=2, kv_layout="auto")
+    rep = cache_specs(m, mesh, batch=2, kv_layout="replicated_heads")
+    k_auto = auto["layers"][0]["mixer"]["k"]
+    k_rep = rep["layers"][0]["mixer"]["k"]
+    # smoke config kv=2 not divisible by model=1? (1 divides) — just check
+    # both are valid PartitionSpecs with rank 5
+    assert len(k_auto) == 5 and len(k_rep) == 5

@@ -1,0 +1,157 @@
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.training import optimizer as opt_mod
+from repro.training.compression import (compressed_psum_tree,
+                                        dequantize_int8, quantize_int8)
+from repro.training.data import MemmapCorpus, SyntheticLM
+from repro.training.train_step import cross_entropy
+
+
+def test_adamw_against_manual():
+    cfg = opt_mod.AdamWConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8,
+                              weight_decay=0.0, grad_clip=0.0, warmup=0,
+                              total_steps=10**9, min_lr_frac=1.0)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    opt = opt_mod.adamw_init(p)
+    new_p, opt, _ = opt_mod.adamw_update(cfg, p, g, opt)
+    # step1: mhat = g, vhat = g², delta = g/(|g|+eps) = sign(g)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               [1.0 - 0.1, -2.0 - 0.1], atol=1e-5)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = opt_mod.global_norm_clip(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    cfg = opt_mod.AdamWConfig(lr=1.0, warmup=10, total_steps=110,
+                              min_lr_frac=0.1)
+    lrs = [float(opt_mod.cosine_schedule(cfg, s)) for s in range(0, 120, 10)]
+    assert lrs[1] == pytest.approx(1.0, rel=1e-3)       # end of warmup
+    assert lrs[-1] == pytest.approx(0.1, rel=1e-2)      # min lr floor
+    assert all(a >= b - 1e-6 for a, b in zip(lrs[1:], lrs[2:]))
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(2, 3, 5)),
+                         jnp.float32)
+    targets = jnp.asarray([[0, 1, 2], [3, 4, 0]])
+    got = float(cross_entropy(logits, targets))
+    p = jax.nn.log_softmax(logits, -1)
+    want = -float(jnp.mean(jnp.take_along_axis(p, targets[..., None], -1)))
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_zero1_specs_shard_moments():
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    p_specs = {"w": P(None, "model"), "n": P()}
+    shapes = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+              "n": jax.ShapeDtypeStruct((6,), jnp.float32)}
+    o = opt_mod.zero1_specs(p_specs, shapes, mesh)
+    # dp size 1 → unchanged; with a fake 2-way mesh the dim gets dp-sharded
+    assert o["mu"]["w"] == P(None, "model")
+    # simulated larger mesh via explicit dp axis count — logic test
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 1}
+    o2 = opt_mod.zero1_specs(p_specs, shapes, FakeMesh())
+    assert o2["mu"]["w"] == P("data", "model")
+    assert o2["nu"]["n"] == P("data")
+
+
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x)).max()
+    assert err <= float(s) / 2 + 1e-7
+
+
+def test_compressed_psum_single_device():
+    """n=1 mesh: compressed mean == dequantized self; residual exact."""
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    g = {"w": jnp.asarray(np.random.default_rng(1).normal(
+        size=(64,)).astype(np.float32))}
+    r0 = jax.tree.map(jnp.zeros_like, g)
+
+    def f(g, r):
+        return compressed_psum_tree(g, r, "data")
+
+    out, res = jax.jit(jax.shard_map(
+        f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        check_vma=False))(g, r0)
+    np.testing.assert_allclose(np.asarray(out["w"]) + np.asarray(res["w"]),
+                               np.asarray(g["w"]), atol=1e-5)
+
+
+def test_error_feedback_reduces_bias():
+    """Mean of compressed grads over steps converges to the true mean."""
+    rng = np.random.default_rng(2)
+    g_true = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+
+    def f(g, r):
+        return compressed_psum_tree({"w": g}, {"w": r}, "data")
+
+    fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                               out_specs=(P(), P()), check_vma=False))
+    r = jnp.zeros_like(g_true)
+    acc = np.zeros(32)
+    n = 50
+    for _ in range(n):
+        out, rd = fn(g_true, r)
+        r = rd["w"]
+        acc += np.asarray(out["w"])
+    np.testing.assert_allclose(acc / n, np.asarray(g_true), atol=2e-3)
+
+
+def test_synthetic_data_deterministic_and_restartable():
+    d1 = SyntheticLM(vocab=100, batch=2, seq=8, seed=5)
+    d2 = SyntheticLM(vocab=100, batch=2, seq=8, seed=5)
+    b1, b2 = d1.batch_at(7), d2.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch_at(8)["tokens"], b1["tokens"])
+    # next-token alignment
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["targets"][:, :-1])
+
+
+def test_memmap_corpus(tmp_path):
+    path = str(tmp_path / "toks.bin")
+    np.arange(10_000, dtype=np.uint16).tofile(path)
+    c = MemmapCorpus(path=path, vocab=512, batch=2, seq=16, seed=0)
+    b = c.batch_at(0)
+    assert b["tokens"].shape == (2, 16)
+    assert (b["tokens"] < 512).all()
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+    b2 = MemmapCorpus(path=path, vocab=512, batch=2, seq=16, seed=0).batch_at(0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])
+
+
+def test_microbatch_equivalence():
+    """grad accumulation over 2 microbatches ≈ single big batch."""
+    from repro.configs import get_config
+    from repro.models.transformer import Model
+    from repro.training.train_step import make_train_step
+    cfg = get_config("granite_8b", "smoke")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = opt_mod.AdamWConfig(lr=1e-3, warmup=0, total_steps=100)
+    s1 = jax.jit(make_train_step(model, opt_cfg, microbatches=1))
+    s2 = jax.jit(make_train_step(model, opt_cfg, microbatches=2))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1)}
+    opt = opt_mod.adamw_init(params)
+    p1, _, m1 = s1(params, opt, batch)
+    p2, _, m2 = s2(params, opt, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
