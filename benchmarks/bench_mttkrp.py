@@ -1,0 +1,153 @@
+"""EC kernel-variant microbenchmark: ref vs blocked vs fused.
+
+    PYTHONPATH=src python -m benchmarks.bench_mttkrp [--quick]
+
+For every (nmodes, rank, nnz) grid point the three EC variants run on the
+same partitioned shard; the report carries, per variant:
+
+  * wall time (best of ``repeats``) and GFLOP/s
+    (flops = nnz · R · nin Hadamard multiplies + nnz · R accumulates),
+  * *modelled* HBM bytes moved and the resulting effective GB/s — the
+    gather-traffic analysis of EXPERIMENTS.md §Perf. The blocked variant
+    both writes and re-reads an (nnz, R) gathered intermediate per input
+    mode (2·nnz·nin·R·4 bytes); the fused variant streams each factor row
+    exactly once (nnz·nin·R·4), so its modelled traffic is strictly lower —
+    asserted here and recorded machine-readably,
+  * an HLO check: ``gather_free`` is True iff the lowered computation
+    contains no XLA gather op (no materialized intermediate exists).
+
+Output: ``experiments/bench/BENCH_mttkrp.json`` (benchmarks/common.py's
+standard location). On this CPU-only container the Pallas variants run in
+interpret mode, so *absolute* times are meaningless for the kernel paths —
+the modelled-traffic numbers and the gather-free property are the
+machine-readable perf trajectory; on TPU the same script reports real
+GFLOP/s.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result, timeit
+
+VARIANTS = ("ref", "blocked", "fused")
+
+
+def _flops(nnz: int, rank: int, nin: int) -> int:
+    # nin multiplies (val·row_1·…·row_nin) + 1 accumulate, per (nz, r) lane
+    return nnz * rank * (nin + 1)
+
+
+def modelled_hbm_bytes(variant: str, nnz: int, rank: int, nin: int,
+                       num_rows: int, num_buffers: int = 2) -> int:
+    """HBM traffic model for one EC call (f32=4B, i32=4B).
+
+    Common terms: values read (nnz·4), output tile writes (num_rows·R·4).
+    Index reads: nnz·nin·4, except the fused kernel's lookahead BlockSpecs
+    stream each index slab ``num_buffers`` times (blocks 0..L-1's slices
+    transit once per lookahead view). Factor-row traffic differs:
+      ref/blocked  gather writes (nnz·nin·R·4) + kernel re-reads them
+      fused        each row read from HBM exactly once, streamed
+    Fused stays strictly below blocked whenever num_buffers - 1 < R + 1,
+    i.e. always for practical ring depths.
+    """
+    common = nnz * 4 + num_rows * rank * 4
+    idx_bytes = nnz * nin * 4
+    row_bytes = nnz * nin * rank * 4
+    if variant == "fused":
+        return common + num_buffers * idx_bytes + row_bytes
+    return common + idx_bytes + 2 * row_bytes
+
+
+def _gather_free(run, args) -> bool:
+    txt = jax.jit(run).lower(*args).as_text()
+    return "gather" not in txt
+
+
+def bench_point(nmodes: int, rank: int, nnz: int, *, repeats: int = 3,
+                seed: int = 0) -> dict:
+    from repro.kernels import ops as kops
+    from repro.kernels.autotune import representative_shard
+
+    t, part = representative_shard(nmodes, nnz, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    factors = [jnp.asarray(rng.normal(size=(s, rank)).astype(np.float32))
+               for s in t.shape]
+    args = (jnp.asarray(part.indices[0]), jnp.asarray(part.values[0]),
+            jnp.asarray(part.local_rows[0]),
+            jnp.asarray(part.block_to_tile[0]), factors)
+    mask = jnp.asarray(part.tile_visited[0])
+    nin = nmodes - 1
+    nnz_pad = part.nnz_max  # post-padding nonzeros actually streamed
+    flops = _flops(nnz_pad, rank, nin)
+
+    point = {"nmodes": nmodes, "rank": rank, "nnz": nnz,
+             "nnz_padded": nnz_pad, "tile": part.tile,
+             "block_p": part.block_p, "variants": {}}
+    for variant in VARIANTS:
+        def run(indices, values, local_rows, block_to_tile, facs,
+                _v=variant):
+            return kops.mttkrp_local(
+                indices, values, local_rows, block_to_tile, facs,
+                mode=0, num_rows=part.rows_max, tile=part.tile,
+                block_p=part.block_p, variant=_v, tile_mask=mask)
+
+        jitted = jax.jit(run)
+        dt = timeit(lambda: jitted(*args).block_until_ready(),
+                    repeats=repeats)
+        hbm = modelled_hbm_bytes(variant, nnz_pad, rank, nin, part.rows_max,
+                                 num_buffers=2)
+        point["variants"][variant] = {
+            "time_s": dt,
+            "gflops_per_s": flops / dt / 1e9,
+            "modelled_hbm_bytes": hbm,
+            "effective_hbm_gb_per_s": hbm / dt / 1e9,
+            "gather_free": _gather_free(run, args),
+        }
+
+    v = point["variants"]
+    assert v["fused"]["modelled_hbm_bytes"] < v["blocked"]["modelled_hbm_bytes"]
+    assert v["fused"]["gather_free"] and not v["blocked"]["gather_free"]
+    return point
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+
+    if args.quick:
+        grid = [(3, 8, 1024)]
+    else:
+        grid = [(nmodes, rank, nnz)
+                for nmodes in (3, 4)
+                for rank in (8, 32)
+                for nnz in (2048, 8192)]
+
+    points = []
+    for nmodes, rank, nnz in grid:
+        pt = bench_point(nmodes, rank, nnz, repeats=args.repeats)
+        f, b = pt["variants"]["fused"], pt["variants"]["blocked"]
+        print(f"nmodes={nmodes} R={rank} nnz={nnz}: "
+              f"fused {f['time_s']*1e3:.2f}ms "
+              f"(model {f['modelled_hbm_bytes']/1e6:.2f}MB) vs blocked "
+              f"{b['time_s']*1e3:.2f}ms "
+              f"(model {b['modelled_hbm_bytes']/1e6:.2f}MB)")
+        points.append(pt)
+
+    save_result("BENCH_mttkrp", {
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "notes": ("interpret-mode times are not hardware-meaningful; "
+                  "modelled_hbm_bytes + gather_free carry the perf claim "
+                  "off-TPU"),
+        "points": points,
+    })
+
+
+if __name__ == "__main__":
+    main()

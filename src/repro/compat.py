@@ -1,0 +1,41 @@
+"""Version-compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (kwarg
+``check_rep``) to the ``jax`` top level (kwarg ``check_vma``) in newer
+releases; this container ships the experimental spelling. All repo code
+goes through :func:`shard_map` so either jax works.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+__all__ = ["shard_map", "axis_size", "cost_analysis"]
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized to a flat dict — jax < 0.5
+    returned a one-element list of per-computation dicts."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        return cost[0] if cost else {}
+    return cost or {}
+
+
+def axis_size(axis_name: str) -> int:
+    """``lax.axis_size`` (jax >= 0.5) / ``lax.psum(1, name)`` (earlier) —
+    static mesh-axis size inside shard_map."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _shard_map_exp(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)

@@ -25,6 +25,18 @@ class PaperRun:
     replication: int | None = 1      # paper scheme: no intra-group merge
     ring: bool = True                # Algorithm-3 ring exchange
     use_kernel: bool = False         # EC kernel (True = Pallas path)
+    kernel_variant: str | None = None  # "ref" | "blocked" | "fused" | None=env
+    num_buffers: int | None = None   # fused DMA ring depth (None=2/autotuned)
+    autotune: bool = False           # sweep (tile, block_p, num_buffers)
+
+    def decompose_kwargs(self) -> dict:
+        """kwargs for :func:`repro.core.decompose.cp_decompose`."""
+        return dict(
+            rank=self.rank, num_devices=self.num_devices,
+            strategy=self.strategy, replication=self.replication,
+            ring=self.ring, use_kernel=self.use_kernel,
+            kernel_variant=self.kernel_variant, num_buffers=self.num_buffers,
+            autotune=self.autotune)
 
 
 def paper_setup(profile: str = "amazon", **overrides) -> PaperRun:
@@ -33,7 +45,17 @@ def paper_setup(profile: str = "amazon", **overrides) -> PaperRun:
 
 
 def optimized_setup(profile: str = "amazon", **overrides) -> PaperRun:
-    """Beyond-paper: auto hierarchical replication + Pallas EC kernel."""
+    """Beyond-paper: auto hierarchical replication + blocked Pallas EC."""
     return dataclasses.replace(
-        PaperRun(profile=profile, replication=None, use_kernel=True),
+        PaperRun(profile=profile, replication=None, use_kernel=True,
+                 kernel_variant="blocked"),
+        **overrides)
+
+
+def fused_setup(profile: str = "amazon", **overrides) -> PaperRun:
+    """Beyond-paper: fused in-kernel gather EC with double-buffered HBM
+    streaming + autotuned (tile, block_p, num_buffers)."""
+    return dataclasses.replace(
+        PaperRun(profile=profile, replication=None, use_kernel=True,
+                 kernel_variant="fused", autotune=True),
         **overrides)

@@ -10,6 +10,10 @@ ever materialised):
 Grams are cached across modes and only the updated mode's gram is recomputed
 (beyond-paper: removes (N−1)/N of gram FLOPs; see EXPERIMENTS.md §Perf).
 
+Mode updates are jitted with the replaced factor buffer donated (off-CPU),
+and the per-sweep fit stays a device scalar — a sweep enqueues no host sync;
+callers block only when they actually read ``state.fits``.
+
 Factor matrices live in the padded ownership layout of their mode (see
 core/partition.py); padding rows are zero and stay zero through sweeps
 (MTTKRP writes zeros there; the solve is row-wise).
@@ -38,7 +42,8 @@ class ALSState:
     lam: jax.Array                 # (R,) column scales
     grams: list[jax.Array]         # per mode, (R, R) = F_wᵀ F_w
     sweep: int = 0
-    fits: list[float] = dataclasses.field(default_factory=list)
+    # Device scalars (or floats after a host read) — reading an entry blocks.
+    fits: list = dataclasses.field(default_factory=list)
 
 
 def init_factors(plan: CPPlan, rank: int, seed: int = 0) -> list[jax.Array]:
@@ -62,12 +67,23 @@ def _pinv_psd(v: jax.Array, rcond: float = 1e-8) -> jax.Array:
 
 
 def make_mode_update(plan: CPPlan, mode: int, mesh: Mesh, **mttkrp_kw) -> Callable:
-    """Jit-able: (dev_arrays, factors, grams) -> (F_d, G_d, M_d, lam)."""
+    """Jitted ``(F_d_old, dev_arrays, other_factors, grams) ->
+    (F_d, G_d, M_d, lam)``.
+
+    ``other_factors`` is the factor list *without* mode ``mode``; the old
+    output-mode factor is passed separately so its buffer can be donated
+    (``F_d`` has the same shape — XLA aliases it in place, saving one
+    padded_d×R allocation per update). Donation is skipped on CPU, where jax
+    does not implement it.
+    """
     mfn = dmttkrp.make_mttkrp_fn(plan.modes[mode], mesh, **mttkrp_kw)
     n = plan.nmodes
 
-    def update(dev, factors: Sequence[jax.Array], grams: Sequence[jax.Array]):
-        m = mfn(dev, list(factors))                       # (padded_d, R)
+    def update(f_old: jax.Array, dev, other_factors: Sequence[jax.Array],
+               grams: Sequence[jax.Array]):
+        factors = list(other_factors[:mode]) + [f_old] + \
+            list(other_factors[mode:])
+        m = mfn(dev, factors)                             # (padded_d, R)
         v = functools.reduce(
             lambda a, b: a * b,
             [grams[w] for w in range(n) if w != mode])     # (R, R)
@@ -78,7 +94,8 @@ def make_mode_update(plan: CPPlan, mode: int, mesh: Mesh, **mttkrp_kw) -> Callab
         g_new = f_new.T @ f_new
         return f_new, g_new, m, lam
 
-    return update
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(update, donate_argnums=donate)
 
 
 def fit_from_stats(norm_x: float, m_last, f_last, lam, grams) -> jax.Array:
@@ -93,18 +110,27 @@ def fit_from_stats(norm_x: float, m_last, f_last, lam, grams) -> jax.Array:
 def als_sweep(plan: CPPlan, mesh: Mesh, dev_arrays: Sequence, state: ALSState,
               updates: Sequence[Callable] | None = None,
               **mttkrp_kw) -> ALSState:
-    """One full sweep over all modes (Algorithm 1). ``updates`` may be a
-    pre-jitted list from :func:`make_mode_update` (one per mode)."""
+    """One full sweep over all modes (Algorithm 1). Multi-sweep callers MUST
+    pass ``updates`` (the jitted list from :func:`make_mode_update`, one per
+    mode) — the ``updates=None`` convenience builds fresh jit closures whose
+    traces are not shared across calls, recompiling every sweep.
+
+    Fully async: the sweep only enqueues device work; the fit is appended as
+    a device scalar and forces a host sync only when read (off CPU the
+    updated factor overwrites the donated old buffer, so do not read factors
+    of a pre-sweep ALSState afterwards)."""
     n = plan.nmodes
     if updates is None:
         updates = [make_mode_update(plan, d, mesh, **mttkrp_kw) for d in range(n)]
     factors, grams = list(state.factors), list(state.grams)
     m_last = f_last = lam = None
     for d in range(n):
-        f_d, g_d, m_d, lam = updates[d](dev_arrays[d], factors, grams)
+        others = [factors[w] for w in range(n) if w != d]
+        f_d, g_d, m_d, lam = updates[d](factors[d], dev_arrays[d], others,
+                                        grams)
         factors[d], grams[d] = f_d, g_d
         m_last, f_last = m_d, f_d
-    fit = float(fit_from_stats(plan.norm, m_last, f_last, lam, grams))
+    fit = fit_from_stats(plan.norm, m_last, f_last, lam, grams)
     return ALSState(factors=factors, lam=lam, grams=grams,
                     sweep=state.sweep + 1, fits=state.fits + [fit])
 

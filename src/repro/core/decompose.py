@@ -21,6 +21,7 @@ from repro.core import als as als_mod
 from repro.core import mttkrp as dmttkrp
 from repro.core.coo import SparseTensor
 from repro.core.partition import CPPlan, Strategy, build_plan
+from repro.kernels import ops as kops
 
 __all__ = ["CPResult", "cp_decompose"]
 
@@ -55,19 +56,42 @@ def cp_decompose(
     tol: float = 1e-5,
     seed: int = 0,
     use_kernel: bool = False,
+    kernel_variant: str | None = None,
+    num_buffers: int | None = None,
+    autotune: bool = False,
     ring: bool = True,
     checkpoint_dir: str | None = None,
     resume: bool = False,
     verbose: bool = False,
 ) -> CPResult:
     """Run CP-ALS. ``use_kernel=True`` selects the Pallas EC kernel
-    (interpret mode off-TPU). ``ring=True`` uses the paper's Algorithm-3
-    ring exchange, else XLA's native all-gather."""
+    (interpret mode off-TPU); ``kernel_variant`` picks among
+    ``"ref" | "blocked" | "fused"`` (None = env/default, see
+    repro.kernels.ops), ``num_buffers`` is the fused kernel's DMA ring depth
+    (None = 2, or the autotuned winner), and ``autotune=True`` sweeps
+    (tile, block_p, num_buffers) on a representative shard before
+    partitioning (cached per problem signature — see repro.kernels.autotune;
+    an explicitly passed ``num_buffers`` is honored over the tuned one).
+    ``ring=True`` uses the paper's Algorithm-3 ring exchange, else XLA's
+    native all-gather."""
     if num_devices is None:
         num_devices = len(jax.devices()) if mesh is None else mesh.devices.size
 
-    plan = build_plan(tensor, num_devices, strategy=strategy,
-                      replication=replication)
+    resolved_variant = kops.resolve_variant(kernel_variant, use_kernel)
+    tile = block_p = None
+    if autotune and resolved_variant != "ref":  # ref ignores all 3 params
+        from repro.kernels.autotune import autotune_ec
+        cfg = autotune_ec(tensor.nmodes, rank, variant=resolved_variant)
+        tile, block_p = cfg.tile, cfg.block_p
+        if num_buffers is None:
+            num_buffers = cfg.num_buffers
+    if num_buffers is None:
+        num_buffers = 2
+
+    plan_kw = dict(strategy=strategy, replication=replication)
+    if tile is not None:
+        plan_kw.update(tile=tile, block_p=block_p)
+    plan = build_plan(tensor, num_devices, **plan_kw)
     r = plan.modes[0].r
     if mesh is None:
         mesh = dmttkrp.cp_mesh(num_devices, r)
@@ -103,20 +127,24 @@ def cp_decompose(
                 start_sweep = step
 
     updates = [als_mod.make_mode_update(plan, d, mesh, use_kernel=use_kernel,
-                                        ring=ring)
+                                        variant=resolved_variant,
+                                        num_buffers=num_buffers, ring=ring)
                for d in range(plan.nmodes)]
 
     for it in range(start_sweep, iters):
         state = als_mod.als_sweep(plan, mesh, dev_arrays, state, updates)
+        # state.fits holds device scalars; each read below blocks the host.
+        # With tol=0, no checkpointing and no verbose, sweeps run sync-free.
         if verbose:
-            print(f"sweep {state.sweep}: fit={state.fits[-1]:.6f}")
+            print(f"sweep {state.sweep}: fit={float(state.fits[-1]):.6f}")
         if checkpoint_dir is not None:
             mgr.save(state.sweep, {
                 "factors": als_mod.unpad_factors(plan, state.factors),
                 "lam": np.asarray(state.lam),
-                "fits": np.asarray(state.fits, np.float64),
+                "fits": np.asarray([float(f) for f in state.fits], np.float64),
             })
-        if len(state.fits) >= 2 and abs(state.fits[-1] - state.fits[-2]) < tol:
+        if tol > 0 and len(state.fits) >= 2 and \
+                abs(float(state.fits[-1]) - float(state.fits[-2])) < tol:
             break
 
     return CPResult(

@@ -21,15 +21,17 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 __all__ = ["ring_all_gather", "all_gather_axes", "merge_partials", "axis_size"]
 
 
 def axis_size(axis_names) -> int:
     if isinstance(axis_names, str):
-        return lax.axis_size(axis_names)
+        return compat.axis_size(axis_names)
     s = 1
     for a in axis_names:
-        s *= lax.axis_size(a)
+        s *= compat.axis_size(a)
     return s
 
 
@@ -74,7 +76,7 @@ def merge_partials(partial: jax.Array, sub_axis: str | None) -> jax.Array:
     r == 1 (the paper's zero-communication case)."""
     if sub_axis is None:
         return partial
-    r = lax.axis_size(sub_axis)
+    r = compat.axis_size(sub_axis)
     if r == 1:
         return partial
     return lax.psum_scatter(partial, sub_axis, scatter_dimension=0, tiled=True)

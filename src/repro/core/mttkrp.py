@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import exchange
 from repro.core.partition import CPPlan, ModePartition
 from repro.kernels import ops as kops
@@ -80,12 +81,14 @@ def shard_plan_mode(part: ModePartition, mesh: Mesh,
 
 def _local_ec(part_meta: dict, indices, values, local_rows, block_to_tile,
               tile_visited, factors, *, use_kernel: bool,
+              variant: str | None, num_buffers: int,
               interpret: bool | None):
     return kops.mttkrp_local(
         indices, values, local_rows, block_to_tile, factors,
         mode=part_meta["mode"], num_rows=part_meta["rows_max"],
         tile=part_meta["tile"], block_p=part_meta["block_p"],
-        use_kernel=use_kernel, interpret=interpret, tile_mask=tile_visited)
+        use_kernel=use_kernel, variant=variant, num_buffers=num_buffers,
+        interpret=interpret, tile_mask=tile_visited)
 
 
 def make_mttkrp_fn(
@@ -95,6 +98,8 @@ def make_mttkrp_fn(
     group_axes: tuple[str, ...] = ("group",),
     sub_axis: str = "sub",
     use_kernel: bool = True,
+    variant: str | None = None,
+    num_buffers: int = 2,
     interpret: bool | None = None,
     ring: bool = True,
 ):
@@ -103,6 +108,9 @@ def make_mttkrp_fn(
     Returns fn(device_arrays, factors) -> replicated padded output factor
     (padded_rows, R) f32. ``factors`` are replicated padded factor matrices
     (one per mode; the output mode's entry is ignored).
+
+    ``variant`` selects the EC kernel (``"ref" | "blocked" | "fused"``, see
+    repro.kernels.ops); ``num_buffers`` is the fused variant's DMA ring depth.
     """
     meta = dict(mode=part.mode, rows_max=part.rows_max, tile=part.tile,
                 block_p=part.block_p)
@@ -119,6 +127,7 @@ def make_mttkrp_fn(
         tile_visited = tile_visited.reshape(tile_visited.shape[-1])
         partial = _local_ec(meta, indices, values, local_rows, block_to_tile,
                             tile_visited, list(factors), use_kernel=use_kernel,
+                            variant=variant, num_buffers=num_buffers,
                             interpret=interpret)
         merged = exchange.merge_partials(
             partial, sub_axis if part.r > 1 else None)
@@ -137,12 +146,11 @@ def make_mttkrp_fn(
     def fn(dev: DeviceArrays, factors: Sequence[jax.Array]) -> jax.Array:
         nf = len(factors)
         f_specs = tuple(P(None, None) for _ in range(nf))
-        shmap = jax.shard_map(
+        shmap = shard_map(
             local_fn,
             mesh=mesh,
             in_specs=in_specs + f_specs,
             out_specs=P(None, None),
-            check_vma=False,
         )
         return shmap(dev.indices, dev.values, dev.local_rows,
                      dev.block_to_tile, dev.tile_visited, *factors)

@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""MTTKRP EC kernels: pure-jnp oracle (ref), blocked Pallas kernel with XLA
+pre-gather (mttkrp_pallas), and the fused in-kernel-gather streaming kernel
+(mttkrp_fused). Variant dispatch lives in ops; (tile, block_p, num_buffers)
+selection in autotune. See EXPERIMENTS.md §Perf."""
+from repro.kernels.mttkrp_fused import ec_fused
+from repro.kernels.mttkrp_pallas import ec_blocked
+from repro.kernels.ops import (KERNEL_VARIANTS, default_interpret,
+                               mttkrp_local, resolve_variant)
+
+__all__ = ["ec_blocked", "ec_fused", "mttkrp_local", "resolve_variant",
+           "KERNEL_VARIANTS", "default_interpret"]

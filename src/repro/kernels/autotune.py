@@ -1,0 +1,201 @@
+"""Autotuner for the MTTKRP EC kernel: sweep (tile, block_p, num_buffers).
+
+The EC's throughput depends on three launch parameters that are baked in at
+partition time (tile, block_p — they shape the blocking done by
+core/partition.py) or at kernel-build time (num_buffers — the fused
+variant's DMA ring depth). The best point depends on (nmodes, R) and on the
+backend, not on the particular tensor: the kernel streams fixed-size
+(block_p, R) slabs whatever the sparsity pattern. So the tuner times each
+candidate on a small *representative shard* (a synthetic zipf tensor run
+through the real partitioner) and caches the winner per
+``(nmodes, rank, backend, variant)``.
+
+Cache format (JSON, see EXPERIMENTS.md §Autotuner):
+
+    {"<nmodes>m_r<rank>_<backend>_<variant>":
+        {"tile": 8, "block_p": 128, "num_buffers": 2,
+         "grid": {"nnz": 4096, "tiles": [8, 16], ...},
+         "timings": {"t8_p128_b2": 0.0012, ...}}}
+
+An entry is only reused when its ``grid`` matches the requested sweep —
+asking for a different candidate grid re-tunes instead of silently
+returning a winner from a grid that never contained your candidates.
+
+Default location ``~/.cache/amped/autotune.json``; override with the
+``AMPED_AUTOTUNE_CACHE`` environment variable (empty string disables the
+on-disk cache; an in-process dict always memoizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+__all__ = ["ECConfig", "autotune_ec", "cache_path", "representative_shard",
+           "DEFAULT_TILES", "DEFAULT_BLOCK_PS", "DEFAULT_NUM_BUFFERS"]
+
+ENV_CACHE = "AMPED_AUTOTUNE_CACHE"
+
+DEFAULT_TILES = (8, 16)
+DEFAULT_BLOCK_PS = (64, 128)
+DEFAULT_NUM_BUFFERS = (2, 3)
+
+_MEMO: dict[str, tuple[dict, "ECConfig"]] = {}  # key -> (grid, winner)
+
+
+@dataclasses.dataclass(frozen=True)
+class ECConfig:
+    tile: int
+    block_p: int
+    num_buffers: int
+    timings: dict = dataclasses.field(default_factory=dict, compare=False)
+
+
+def cache_path() -> str | None:
+    p = os.environ.get(ENV_CACHE)
+    if p == "":
+        return None
+    return p or os.path.expanduser("~/.cache/amped/autotune.json")
+
+
+def _cache_key(nmodes: int, rank: int, backend: str, variant: str) -> str:
+    return f"{nmodes}m_r{rank}_{backend}_{variant}"
+
+
+def _load_cache(path: str | None) -> dict:
+    if path and os.path.exists(path):
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError):
+            pass
+    return {}
+
+
+def _store_cache(path: str | None, cache: dict) -> None:
+    if not path:
+        return
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(cache, f, indent=1, sort_keys=True)
+    except OSError:
+        pass  # read-only filesystems: the in-process memo still applies
+
+
+def representative_shard(nmodes: int, nnz: int, tile: int | None = None,
+                         block_p: int | None = None, seed: int = 0):
+    """A zipf-skewed synthetic tensor run through the real partitioner, so
+    candidates are timed on exactly the blocking they would produce.
+    Returns (tensor, single-device ModePartition for mode 0). Shared by the
+    tuner and benchmarks/bench_mttkrp.py."""
+    from repro.core.coo import random_sparse
+    from repro.core.partition import partition_mode
+    dim = max(16, int(round(nnz ** (1.0 / nmodes))) * 2)
+    t = random_sparse((dim,) * nmodes, nnz, seed=seed, distribution="zipf")
+    kw = {}
+    if tile is not None:
+        kw.update(tile=tile, block_p=block_p)
+    part, _, _ = partition_mode(t, 0, 1, strategy="amped_cdf", replication=1,
+                                **kw)
+    return t, part
+
+
+def _time_candidate(t, part, rank: int, variant: str, num_buffers: int,
+                    interpret: bool, repeats: int, seed: int = 0) -> float:
+    rng = np.random.default_rng(seed)
+    factors = [jnp.asarray(rng.normal(size=(s, rank)).astype(np.float32))
+               for s in t.shape]
+    args = (jnp.asarray(part.indices[0]), jnp.asarray(part.values[0]),
+            jnp.asarray(part.local_rows[0]),
+            jnp.asarray(part.block_to_tile[0]))
+    mask = jnp.asarray(part.tile_visited[0])
+
+    @jax.jit
+    def run(indices, values, local_rows, block_to_tile, facs):
+        return kops.mttkrp_local(
+            indices, values, local_rows, block_to_tile, facs,
+            mode=0, num_rows=part.rows_max, tile=part.tile,
+            block_p=part.block_p, variant=variant, num_buffers=num_buffers,
+            interpret=interpret, tile_mask=mask)
+
+    run(*args, factors).block_until_ready()  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run(*args, factors).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_ec(
+    nmodes: int,
+    rank: int,
+    *,
+    variant: str = "fused",
+    nnz: int = 4096,
+    tiles=DEFAULT_TILES,
+    block_ps=DEFAULT_BLOCK_PS,
+    num_buffers_grid=DEFAULT_NUM_BUFFERS,
+    repeats: int = 3,
+    interpret: bool | None = None,
+    force: bool = False,
+) -> ECConfig:
+    """Sweep the candidate grid on a representative shard; return (and
+    cache) the fastest ``ECConfig`` for ``(nmodes, rank, backend, variant)``.
+
+    Variants without a DMA ring (``ref``, ``blocked``) collapse the
+    ``num_buffers`` axis.
+    """
+    variant = kops.resolve_variant(variant)
+    backend = jax.default_backend()
+    if interpret is None:
+        interpret = kops.default_interpret()
+    if variant != "fused":
+        num_buffers_grid = (2,)  # no DMA ring: the axis is meaningless
+    key = _cache_key(nmodes, rank, backend, variant)
+    # A cached winner is only valid for the grid that produced it.
+    grid = {"nnz": nnz, "tiles": list(tiles), "block_ps": list(block_ps),
+            "num_buffers_grid": list(num_buffers_grid)}
+
+    if not force:
+        memo = _MEMO.get(key)
+        if memo is not None and memo[0] == grid:
+            return memo[1]
+        disk = _load_cache(cache_path()).get(key)
+        if disk is not None and disk.get("grid") == grid:
+            cfg = ECConfig(int(disk["tile"]), int(disk["block_p"]),
+                           int(disk["num_buffers"]),
+                           dict(disk.get("timings", {})))
+            _MEMO[key] = (grid, cfg)
+            return cfg
+
+    timings: dict[str, float] = {}
+    best, best_t = None, float("inf")
+    for tile in tiles:
+        for block_p in block_ps:
+            t, part = representative_shard(nmodes, nnz, tile, block_p)
+            for nb in num_buffers_grid:
+                dt = _time_candidate(t, part, rank, variant, nb,
+                                     interpret, repeats)
+                timings[f"t{tile}_p{block_p}_b{nb}"] = dt
+                if dt < best_t:
+                    best_t, best = dt, (tile, block_p, nb)
+
+    assert best is not None
+    best_cfg = ECConfig(*best, dict(timings))
+    _MEMO[key] = (grid, best_cfg)
+    path = cache_path()
+    cache = _load_cache(path)
+    cache[key] = {"tile": best_cfg.tile, "block_p": best_cfg.block_p,
+                  "num_buffers": best_cfg.num_buffers, "grid": grid,
+                  "timings": timings}
+    _store_cache(path, cache)
+    return best_cfg

@@ -1,0 +1,189 @@
+"""Second-generation fused EC kernel: in-kernel factor gather with
+double-buffered HBM streaming.
+
+``ec_blocked`` (mttkrp_pallas.py) needs the input factor rows gathered by XLA
+*before* the kernel, materializing ``N-1`` arrays of shape ``(nnz, R)`` in
+HBM per MTTKRP call — at billion-scale nnz that intermediate dwarfs the
+nonzero payload and makes the EC gather-bandwidth-bound. ``ec_fused``
+eliminates it, following the paper's Alg. 2 where each R×P threadblock loads
+its own factor rows straight from global memory:
+
+  * the factor matrices stay resident in HBM (``pltpu.ANY`` memory space) —
+    they are never tiled into VMEM by the pipeline,
+  * per-block slices of the (pre-compacted) input-mode index array arrive
+    through BlockSpecs; *lookahead* index maps (block ``i`` sees the slice of
+    block ``i+k``) let invocation ``i`` know the rows the *next* blocks need.
+    The ``num_buffers`` views stream each index slab that many times — a
+    deliberate trade of (num_buffers−1)·nnz·nin·4 B of extra index traffic
+    (≲ (num_buffers−1)/R of the row traffic it replaces) for keeping the
+    index pipeline in Pallas's automatic machinery,
+  * each invocation stages its lookahead index slice into SMEM (scalar
+    addressing) and issues one async HBM→VMEM copy per (nonzero, input mode)
+    row into a rotating ring of ``num_buffers`` VMEM slots
+    (``pltpu.make_async_copy``), so the DMA of block ``i+1`` overlaps the VPU
+    Hadamard product and MXU one-hot accumulation of block ``i``,
+  * a single aggregated semaphore wait per slot (a descriptor covering the
+    whole ``(nin, block_p, R)`` slot) retires all of a block's row copies.
+
+No ``(nnz, R)`` gathered intermediate ever exists: per MTTKRP call the factor
+rows are read from HBM exactly once, streamed through VMEM, and consumed in
+place.
+
+Kernel contract (identical to ``ec_blocked``, enforced by core/partition.py):
+blocks are fixed-size ``block_p`` runs of nonzeros, every block updates rows
+inside one output tile, blocks of a tile are consecutive, padding entries
+have ``values == 0`` (their index entries point at row 0, an always-valid
+row, so the prefetched DMA is a harmless read).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ec_fused"]
+
+MAX_NUM_BUFFERS = 4
+
+
+def _fused_kernel(nin: int, num_buffers: int, nblocks: int,
+                  b2t, *refs):
+    """refs layout (after the scalar-prefetched ``b2t``):
+
+      vals_ref, seg_ref,
+      idx_ref_0 .. idx_ref_{L},      L+1 views of the index array; idx_ref_k
+                                     holds block min(i+k, nblocks-1)'s slice
+      fac_ref_0 .. fac_ref_{nin-1},  full factor matrices, HBM-resident
+      out_ref,
+      idx_smem, row_buf, row_sems, stage_sem
+    """
+    lookahead = num_buffers - 1
+    vals_ref, seg_ref = refs[0], refs[1]
+    idx_refs = refs[2:2 + lookahead + 1]
+    fac_refs = refs[2 + lookahead + 1:2 + lookahead + 1 + nin]
+    out_ref = refs[2 + lookahead + 1 + nin]
+    idx_smem, row_buf, row_sems, stage_sem = refs[-4:]
+
+    i = pl.program_id(0)
+    block_p = vals_ref.shape[0]
+
+    def start_rows(idx_ref, slot):
+        """Stage idx_ref (VMEM) into SMEM, then launch one row DMA per
+        (nonzero, input mode) into ``row_buf[slot]``."""
+        stage = pltpu.make_async_copy(idx_ref, idx_smem, stage_sem)
+        stage.start()
+        stage.wait()
+
+        def body(p, _):
+            for w in range(nin):
+                pltpu.make_async_copy(
+                    fac_refs[w].at[idx_smem[p, w]],
+                    row_buf.at[slot, w, p],
+                    row_sems.at[slot],
+                ).start()
+            return 0
+
+        jax.lax.fori_loop(0, block_p, body, 0)
+
+    @pl.when(i == 0)
+    def _prologue():
+        # Fill the pipeline: rows for blocks 0 .. lookahead-1.
+        for k in range(lookahead):
+            if k < nblocks:
+                start_rows(idx_refs[k], k % num_buffers)
+
+    # Steady state: while block i computes below, stream in the rows of the
+    # block ``lookahead`` ahead (its index slice arrived via idx_refs[-1]).
+    @pl.when(i + lookahead < nblocks)
+    def _prefetch():
+        start_rows(idx_refs[lookahead],
+                   jax.lax.rem(i + lookahead, num_buffers))
+
+    slot = jax.lax.rem(i, num_buffers)
+    # Aggregated wait: retire all nin*block_p row copies of this slot.
+    pltpu.make_async_copy(row_buf.at[slot], row_buf.at[slot],
+                          row_sems.at[slot]).wait()
+
+    prev = b2t[jnp.maximum(i - 1, 0)]
+
+    @pl.when(jnp.logical_or(i == 0, prev != b2t[i]))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    e = vals_ref[...].astype(jnp.float32)[:, None]
+    for w in range(nin):
+        e = e * row_buf[slot, w]
+    tile = out_ref.shape[0]
+    seg = seg_ref[...]
+    onehot = (seg[None, :] == jax.lax.broadcasted_iota(
+        jnp.int32, (tile, block_p), 0))
+    out_ref[...] += jnp.dot(onehot.astype(jnp.float32), e,
+                            preferred_element_type=jnp.float32)
+
+
+def ec_fused(
+    values: jax.Array,                 # (nnz,)  nnz = nblocks * block_p
+    row_in_tile: jax.Array,            # (nnz,) int32 in [0, tile)
+    block_to_tile: jax.Array,          # (nblocks,) int32, scalar-prefetched
+    input_indices: jax.Array,          # (nnz, nin) int32 rows into factors[w]
+    factors: Sequence[jax.Array],      # nin arrays (padded_w, R), HBM-resident
+    *,
+    num_rows: int,                     # rows_max (multiple of tile)
+    tile: int,
+    block_p: int,
+    num_buffers: int = 2,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused EC: gather + Hadamard + accumulate, no gathered intermediate.
+
+    Returns (num_rows, R) f32. ``input_indices[:, j]`` indexes ``factors[j]``
+    (the output mode is already compacted away by the caller, see ops.py).
+    """
+    nnz = values.shape[0]
+    assert nnz % block_p == 0, (nnz, block_p)
+    assert num_rows % tile == 0, (num_rows, tile)
+    if not (2 <= num_buffers <= MAX_NUM_BUFFERS):
+        raise ValueError(
+            f"num_buffers must be in [2, {MAX_NUM_BUFFERS}], got {num_buffers}")
+    nblocks = nnz // block_p
+    nin = len(factors)
+    assert input_indices.shape == (nnz, nin), (input_indices.shape, nnz, nin)
+    r = factors[0].shape[-1]
+    lookahead = num_buffers - 1
+
+    def idx_map(k):
+        return lambda i, b2t: (jnp.minimum(i + k, nblocks - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block_p,), lambda i, b2t: (i,)),
+            pl.BlockSpec((block_p,), lambda i, b2t: (i,)),
+        ] + [
+            pl.BlockSpec((block_p, nin), idx_map(k))
+            for k in range(lookahead + 1)
+        ] + [
+            pl.BlockSpec(memory_space=pltpu.ANY) for _ in range(nin)
+        ],
+        out_specs=pl.BlockSpec((tile, r), lambda i, b2t: (b2t[i], 0)),
+        scratch_shapes=[
+            pltpu.SMEM((block_p, nin), jnp.int32),
+            pltpu.VMEM((num_buffers, nin, block_p, r), jnp.float32),
+            pltpu.SemaphoreType.DMA((num_buffers,)),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    facs32 = [f.astype(jnp.float32) for f in factors]
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, nin, num_buffers, nblocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_rows, r), jnp.float32),
+        interpret=interpret,
+        name=f"amped_ec_fused_nin{nin}_nb{num_buffers}",
+    )(block_to_tile, values, row_in_tile,
+      *([input_indices] * (lookahead + 1)), *facs32)

@@ -21,8 +21,10 @@ is zero-initialised when the map changes. Per block the kernel computes
 which is the paper's EC with zero write conflicts — the same race-freedom
 the output-mode sharding buys across devices, pushed down to lane level.
 
-Input factor rows are gathered by XLA ahead of the kernel (``ops.py``); a
-fused in-kernel gather via async HBM copies is a recorded perf iteration.
+Input factor rows are gathered by XLA ahead of the kernel (``ops.py``),
+materializing (nnz, R) intermediates in HBM; ``mttkrp_fused.ec_fused`` is the
+follow-up that performs the gather in-kernel via double-buffered async HBM
+copies. Variant selection lives in ``ops.KERNEL_VARIANTS``.
 """
 from __future__ import annotations
 

@@ -1,25 +1,107 @@
-"""Jit-ready wrappers around the MTTKRP EC kernel.
+"""Kernel-variant dispatch for the MTTKRP EC.
 
 ``mttkrp_local`` is the single-device EC used inside shard_map by
-core/mttkrp.py: gather input factor rows (XLA gather), then run either the
-Pallas kernel (TPU target; ``interpret=True`` on CPU) or the pure-jnp
-segment-sum path.
+core/mttkrp.py. Three interchangeable variants (see EXPERIMENTS.md §Perf):
+
+  ``ref``      pure-jnp gather + segment_sum (XLA; the semantic oracle)
+  ``blocked``  XLA pre-gather of (nnz, R) input rows + Pallas one-hot-matmul
+               EC kernel (mttkrp_pallas.ec_blocked)
+  ``fused``    in-kernel factor gather with double-buffered HBM streaming —
+               no gathered intermediate (mttkrp_fused.ec_fused)
+
+Selection precedence: explicit ``variant=`` argument > ``AMPED_EC_VARIANT``
+environment variable > default (``blocked``). ``use_kernel=False`` keeps its
+historical meaning and forces ``ref`` unless a variant is named explicitly.
+Off-TPU backends run the Pallas variants in ``interpret=True`` mode.
 """
 from __future__ import annotations
 
+import os
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.mttkrp_fused import ec_fused
 from repro.kernels.mttkrp_pallas import ec_blocked
 
-__all__ = ["mttkrp_local", "default_interpret"]
+__all__ = ["mttkrp_local", "default_interpret", "resolve_variant",
+           "KERNEL_VARIANTS", "ENV_VARIANT", "DEFAULT_VARIANT"]
+
+ENV_VARIANT = "AMPED_EC_VARIANT"
+DEFAULT_VARIANT = "blocked"
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def resolve_variant(variant: str | None = None, use_kernel: bool = True) -> str:
+    """Resolve the EC kernel variant name (see module docstring)."""
+    if variant is None:
+        if not use_kernel:
+            return "ref"
+        variant = os.environ.get(ENV_VARIANT, DEFAULT_VARIANT)
+    if variant not in KERNEL_VARIANTS:
+        raise ValueError(
+            f"unknown EC variant {variant!r}; expected one of "
+            f"{sorted(KERNEL_VARIANTS)}")
+    return variant
+
+
+def _mask_unvisited(out: jax.Array, tile_mask: jax.Array | None,
+                    tile: int) -> jax.Array:
+    if tile_mask is None:
+        return out
+    # Tiles never visited by a block are uninitialised VMEM (possibly
+    # NaN) — select, don't multiply (NaN * 0 == NaN).
+    mask = jnp.repeat(tile_mask > 0, tile)[:, None]
+    return jnp.where(mask, out, 0.0)
+
+
+def _run_ref(indices, values, local_rows, block_to_tile, factors, *,
+             mode, num_rows, tile, block_p, interpret, tile_mask,
+             num_buffers):
+    del block_to_tile, tile, block_p, interpret, tile_mask, num_buffers
+    return _ref.mttkrp_local_ref(indices, values, local_rows, factors,
+                                 mode, num_rows)
+
+
+def _run_blocked(indices, values, local_rows, block_to_tile, factors, *,
+                 mode, num_rows, tile, block_p, interpret, tile_mask,
+                 num_buffers):
+    del num_buffers
+    gathered = [factors[w][indices[:, w]]
+                for w in range(len(factors)) if w != mode]
+    row_in_tile = (local_rows % tile).astype(jnp.int32)
+    out = ec_blocked(
+        values, row_in_tile, block_to_tile, gathered,
+        num_rows=num_rows, tile=tile, block_p=block_p, interpret=interpret)
+    return _mask_unvisited(out, tile_mask, tile)
+
+
+def _run_fused(indices, values, local_rows, block_to_tile, factors, *,
+               mode, num_rows, tile, block_p, interpret, tile_mask,
+               num_buffers):
+    # Compact the input-mode index columns into one (nnz, nin) array; the
+    # factor matrices themselves stay in HBM (no (nnz, R) intermediate).
+    in_modes = [w for w in range(len(factors)) if w != mode]
+    input_indices = jnp.stack([indices[:, w] for w in in_modes], axis=1)
+    row_in_tile = (local_rows % tile).astype(jnp.int32)
+    out = ec_fused(
+        values, row_in_tile, block_to_tile, input_indices,
+        [factors[w] for w in in_modes],
+        num_rows=num_rows, tile=tile, block_p=block_p,
+        num_buffers=num_buffers, interpret=interpret)
+    return _mask_unvisited(out, tile_mask, tile)
+
+
+KERNEL_VARIANTS = {
+    "ref": _run_ref,
+    "blocked": _run_blocked,
+    "fused": _run_fused,
+}
 
 
 def mttkrp_local(
@@ -34,24 +116,16 @@ def mttkrp_local(
     tile: int,
     block_p: int,
     use_kernel: bool = True,
+    variant: str | None = None,
+    num_buffers: int = 2,
     interpret: bool | None = None,
     tile_mask: jax.Array | None = None,  # (num_rows/tile,) 1=visited
 ) -> jax.Array:
     """Local (per-device) EC over this device's shard. Returns (num_rows, R) f32."""
-    if not use_kernel:
-        return _ref.mttkrp_local_ref(indices, values, local_rows, factors,
-                                     mode, num_rows)
+    variant = resolve_variant(variant, use_kernel)
     if interpret is None:
         interpret = default_interpret()
-    gathered = [factors[w][indices[:, w]]
-                for w in range(len(factors)) if w != mode]
-    row_in_tile = (local_rows % tile).astype(jnp.int32)
-    out = ec_blocked(
-        values, row_in_tile, block_to_tile, gathered,
-        num_rows=num_rows, tile=tile, block_p=block_p, interpret=interpret)
-    if tile_mask is not None:
-        # Tiles never visited by a block are uninitialised VMEM (possibly
-        # NaN) — select, don't multiply (NaN * 0 == NaN).
-        mask = jnp.repeat(tile_mask > 0, tile)[:, None]
-        out = jnp.where(mask, out, 0.0)
-    return out
+    return KERNEL_VARIANTS[variant](
+        indices, values, local_rows, block_to_tile, factors,
+        mode=mode, num_rows=num_rows, tile=tile, block_p=block_p,
+        interpret=interpret, tile_mask=tile_mask, num_buffers=num_buffers)

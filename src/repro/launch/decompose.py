@@ -3,7 +3,9 @@
     PYTHONPATH=src python -m repro.launch.decompose --profile amazon \
         --scale 2e-4 --paper          # paper-faithful configuration
     PYTHONPATH=src python -m repro.launch.decompose --profile twitch \
-        --scale 2e-4 --optimized      # beyond-paper (auto-r + kernel)
+        --scale 2e-4 --optimized      # beyond-paper (auto-r + blocked kernel)
+    PYTHONPATH=src python -m repro.launch.decompose --profile twitch \
+        --scale 2e-4 --fused          # fused in-kernel gather + autotune
 """
 from __future__ import annotations
 
@@ -22,27 +24,35 @@ def main():
     mode = ap.add_mutually_exclusive_group()
     mode.add_argument("--paper", action="store_true")
     mode.add_argument("--optimized", action="store_true")
+    mode.add_argument("--fused", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="override EC kernel variant (ref|blocked|fused)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
-    from repro.configs.amped_paper import optimized_setup, paper_setup
+    from repro.configs.amped_paper import (fused_setup, optimized_setup,
+                                           paper_setup)
     from repro.core.decompose import cp_decompose
     from repro.sparse.io import make_profile_tensor
 
-    setup = (optimized_setup if args.optimized else paper_setup)(args.profile)
+    make = (fused_setup if args.fused
+            else optimized_setup if args.optimized else paper_setup)
+    setup = make(args.profile)
     if args.devices:
         setup = dataclasses.replace(setup, num_devices=args.devices)
+    if args.variant:
+        setup = dataclasses.replace(setup, use_kernel=args.variant != "ref",
+                                    kernel_variant=args.variant)
 
     t = make_profile_tensor(args.profile, scale=args.scale, seed=0)
     print(f"{args.profile} @ {args.scale}: shape={t.shape} nnz={t.nnz} "
           f"devices={setup.num_devices} r={setup.replication} "
-          f"kernel={setup.use_kernel}")
+          f"kernel={setup.use_kernel} variant={setup.kernel_variant}")
     t0 = time.time()
     res = cp_decompose(
-        t, rank=args.rank, num_devices=setup.num_devices,
-        strategy=setup.strategy, replication=setup.replication,
-        ring=setup.ring, use_kernel=setup.use_kernel, iters=args.iters,
-        checkpoint_dir=args.ckpt, resume=args.ckpt is not None, verbose=True)
+        t, **{**setup.decompose_kwargs(), "rank": args.rank},
+        iters=args.iters, checkpoint_dir=args.ckpt,
+        resume=args.ckpt is not None, verbose=True)
     print(f"{res.sweeps} sweeps in {time.time()-t0:.1f}s; "
           f"final fit {res.fits[-1]:.5f}")
 

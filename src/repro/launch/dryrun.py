@@ -24,6 +24,7 @@ import traceback      # noqa: E402
 import jax            # noqa: E402
 import numpy as np    # noqa: E402
 
+from repro import compat
 from repro.configs import ARCH_IDS                      # noqa: E402
 from repro.launch import roofline as rf                 # noqa: E402
 from repro.launch.mesh import (make_cp_production_mesh,  # noqa: E402
@@ -59,7 +60,7 @@ def run_cell(arch: str, cell: str, *, multi_pod: bool, remat: str | None = None,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         try:
             hlo = compiled.as_text()
         except Exception:
@@ -179,7 +180,7 @@ def run_cp_cell(*, multi_pod: bool, profile: str = "amazon",
                              out_shardings=NamedSharding(mesh, P(None, None)))
             lowered = jitted.lower(dev, factors)
             compiled = lowered.compile()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         hlo = compiled.as_text()
         parsed = rf.parse_hlo(hlo)
         coll = parsed["collectives"]

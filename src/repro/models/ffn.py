@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+from repro.compat import shard_map
 from repro.models import shardctx
 
 __all__ = ["mlp", "moe", "moe_ref_dense", "moe_a2a"]
@@ -201,7 +203,7 @@ def moe_a2a(x, p, *, topk: int, capacity_factor: float, act: str,
         # xb: (B_loc, S_loc, d) — every device routes a distinct token slice
         # (replicating over EP would duplicate expert work ep× — confirmed
         # 9–16× compute blowup, see EXPERIMENTS §Perf)
-        ep = lax.axis_size(ep_axis)
+        ep = compat.axis_size(ep_axis)
         e_loc = w1.shape[0]
         e = e_loc * ep
         b_loc, s_loc, d = xb.shape
@@ -264,10 +266,9 @@ def moe_a2a(x, p, *, topk: int, capacity_factor: float, act: str,
     in_specs = (x_spec, P(None, None),
                 P(ep_axis, None, None), P(ep_axis, None, None),
                 P(ep_axis, None, None) if has_w3 else P())
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda xl, r, a, b, c: body(xl, r, a, b, c if has_w3 else None),
-        mesh=mesh, in_specs=in_specs, out_specs=x_spec,
-        check_vma=False)
+        mesh=mesh, in_specs=in_specs, out_specs=x_spec)
     dummy = jnp.zeros((), x.dtype)
     out = fn(x, p["router"], p["w1"], p["w2"], w3 if has_w3 else dummy)
     return out, {}

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 __all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_tree"]
 
 
@@ -41,7 +43,7 @@ def compressed_psum_tree(grads: Any, residual: Any, axis_names) -> tuple[Any, An
     n = 1
     names = (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
     for a in names:
-        n *= lax.axis_size(a)
+        n *= compat.axis_size(a)
 
     def one(g, r):
         g32 = g.astype(jnp.float32) + r

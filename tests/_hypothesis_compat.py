@@ -1,0 +1,58 @@
+"""Optional-hypothesis shim: property tests degrade to example-based cases.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt). On clean
+environments without it, importing it at module scope used to kill the whole
+suite at collection time. This shim re-exports the real ``given``/
+``settings``/``strategies`` when hypothesis is installed; otherwise it
+provides a deterministic fallback that turns ``@given(...)`` into a
+``pytest.mark.parametrize`` over a fixed, seeded sample of each strategy —
+the same tests run, just with example-based rather than property-based
+coverage. Only the strategy surface this repo uses is shimmed
+(``st.integers``, ``st.sampled_from``).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+    import random
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 10  # cap: example mode should stay fast
+
+    class _Strategy:
+        def __init__(self, sampler):
+            self.sample = sampler
+
+    class st:  # noqa: N801 — mirrors the hypothesis import alias
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n = min(getattr(fn, "_fallback_max_examples",
+                            _FALLBACK_EXAMPLES), _FALLBACK_EXAMPLES)
+            rng = random.Random(0xA3ED)
+            cases = [tuple(s.sample(rng) for s in strategies)
+                     for _ in range(n)]
+            if len(strategies) == 1:
+                cases = [c[0] for c in cases]  # parametrize wants bare values
+            names = list(inspect.signature(fn).parameters)[:len(strategies)]
+            return pytest.mark.parametrize(",".join(names), cases)(fn)
+        return deco

@@ -1,6 +1,6 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.coo import SparseTensor, from_dense, random_sparse, to_dense
 from repro.sparse.io import (DATASET_PROFILES, make_profile_tensor, read_tns,

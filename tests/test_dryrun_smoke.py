@@ -6,6 +6,7 @@ import pytest
 import jax
 from jax.sharding import Mesh
 
+from repro import compat
 from repro.launch import roofline as rf
 from repro.launch.shapes import input_specs
 
@@ -29,7 +30,7 @@ def test_lower_compile_smoke(arch, cell):
                          out_shardings=spec.out_shardings)
         lowered = jitted.lower(*spec.args)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     assert cost and cost.get("flops", 0) > 0
     coll = rf.collective_bytes(compiled.as_text())
     terms = rf.roofline_terms(cost, coll)

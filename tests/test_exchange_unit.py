@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import exchange
 from repro.core.partition import auto_replication
 from repro.launch import roofline as rf
@@ -23,8 +24,8 @@ def test_ring_all_gather_single_device_identity():
     def f(x):
         return exchange.ring_all_gather(x, ("group", "sub"))
 
-    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(("group", "sub")),
-                                out_specs=P(None), check_vma=False))(x)
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P(("group", "sub")),
+                                out_specs=P(None)))(x)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
 
 
@@ -35,8 +36,8 @@ def test_merge_partials_identity_r1():
     def f(x):
         return exchange.merge_partials(x, "sub")  # r=1 → identity
 
-    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(None, None),
-                                out_specs=P(None, None), check_vma=False))(x)
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P(None, None),
+                                out_specs=P(None, None)))(x)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
 
 

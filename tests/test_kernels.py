@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.mttkrp_pallas import ec_blocked
 from repro.kernels.ref import ec_rows_ref
@@ -116,3 +116,153 @@ def test_ops_wrapper_matches_ref(small_tensor):
                           use_kernel=False, **kw)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
                                atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused in-kernel-gather EC (mttkrp_fused.ec_fused) — see EXPERIMENTS.md §Perf
+# ---------------------------------------------------------------------------
+
+def _partitioned_case(nmodes, rank, seed=0, nnz=400, num_devices=1,
+                      replication=1, tile=8, block_p=128, skew="zipf"):
+    """Random tensor → real partition arrays → random (shape[w], rank)
+    factors (global layout — single-device partitions keep indices
+    untranslated)."""
+    from repro.core.coo import random_sparse
+    from repro.core.partition import partition_mode
+    shape = tuple([24, 18, 12, 10, 8][:nmodes])
+    t = random_sparse(shape, nnz, seed=seed, distribution=skew)
+    part, g2p, _ = partition_mode(t, 1, num_devices, strategy="amped_cdf",
+                                  replication=replication, tile=tile,
+                                  block_p=block_p)
+    rng = np.random.default_rng(seed + 1)
+    factors = [jnp.asarray(
+        rng.normal(size=(t.shape[w], rank)).astype(np.float32))
+        for w in range(nmodes)]
+    return t, part, factors
+
+
+def _run_variant(part, factors, variant, dev=0, num_buffers=2):
+    kw = dict(mode=1, num_rows=part.rows_max, tile=part.tile,
+              block_p=part.block_p)
+    return kops.mttkrp_local(
+        jnp.asarray(part.indices[dev]), jnp.asarray(part.values[dev]),
+        jnp.asarray(part.local_rows[dev]),
+        jnp.asarray(part.block_to_tile[dev]), factors,
+        variant=variant, num_buffers=num_buffers, interpret=True,
+        tile_mask=jnp.asarray(part.tile_visited[dev]), **kw)
+
+
+@pytest.mark.parametrize("nmodes", [3, 4, 5])
+@pytest.mark.parametrize("rank", [8, 32])
+def test_fused_matches_ref(nmodes, rank):
+    _, part, factors = _partitioned_case(nmodes, rank, seed=nmodes * 10 + rank)
+    got = np.asarray(_run_variant(part, factors, "fused"))
+    ref = np.asarray(_run_variant(part, factors, "ref"))
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("num_buffers", [2, 3, 4])
+def test_fused_num_buffers(num_buffers):
+    """Deeper DMA rings change only the schedule, never the result."""
+    _, part, factors = _partitioned_case(3, 16, seed=5)
+    got = np.asarray(_run_variant(part, factors, "fused",
+                                  num_buffers=num_buffers))
+    ref = np.asarray(_run_variant(part, factors, "ref"))
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_matches_blocked():
+    _, part, factors = _partitioned_case(4, 16, seed=9)
+    got = np.asarray(_run_variant(part, factors, "fused"))
+    blk = np.asarray(_run_variant(part, factors, "blocked"))
+    np.testing.assert_allclose(got, blk, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_empty_shard():
+    """A device that owns no nonzeros (2 groups, skewed tensor) must produce
+    exact zeros — all its blocks are padding."""
+    from repro.core.coo import SparseTensor
+    from repro.core.partition import partition_mode
+    # every nonzero updates output index 0 → group 1 of 2 owns nothing
+    ind = np.zeros((50, 3), np.int64)
+    ind[:, 1] = np.arange(50) % 7
+    ind[:, 2] = np.arange(50) % 5
+    t = SparseTensor(ind.astype(np.int32),
+                     np.ones(50, np.float32), (3, 7, 5))
+    part, _, _ = partition_mode(t, 0, 2, strategy="amped_cdf", replication=1)
+    empty = int(np.argmin(part.nnz_true))
+    assert part.nnz_true[empty] == 0
+    rng = np.random.default_rng(0)
+    factors = [jnp.asarray(rng.normal(size=(s, 8)).astype(np.float32))
+               for s in t.shape]
+    kw = dict(mode=0, num_rows=part.rows_max, tile=part.tile,
+              block_p=part.block_p)
+    out = kops.mttkrp_local(
+        jnp.asarray(part.indices[empty]), jnp.asarray(part.values[empty]),
+        jnp.asarray(part.local_rows[empty]),
+        jnp.asarray(part.block_to_tile[empty]), factors,
+        variant="fused", interpret=True,
+        tile_mask=jnp.asarray(part.tile_visited[empty]), **kw)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_fused_replicated_shards():
+    """r>1: each replica's fused partial equals its ref partial (the
+    intra-group reduce-scatter then merges identical quantities)."""
+    _, part, factors = _partitioned_case(3, 16, seed=3, num_devices=2,
+                                         replication=2)
+    assert part.r == 2 and part.n_groups == 1
+    for dev in range(2):
+        got = np.asarray(_run_variant(part, factors, "fused", dev=dev))
+        ref = np.asarray(_run_variant(part, factors, "ref", dev=dev))
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_padding_blocks():
+    """nnz far from a block_p multiple → heavy in-tile padding plus whole
+    trailing pad blocks; all must be exact no-ops."""
+    _, part, factors = _partitioned_case(3, 16, seed=11, nnz=37, block_p=128)
+    assert (part.values == 0).any()  # real padding present
+    got = np.asarray(_run_variant(part, factors, "fused"))
+    ref = np.asarray(_run_variant(part, factors, "ref"))
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_hlo_has_no_gathered_intermediate():
+    """The acceptance property: the fused path lowers with NO gather op at
+    all (factor rows are streamed in-kernel), while the blocked path
+    materializes one (nnz, R) gather per input mode."""
+    _, part, factors = _partitioned_case(3, 16, seed=2)
+    kw = dict(mode=1, num_rows=part.rows_max, tile=part.tile,
+              block_p=part.block_p, interpret=True,
+              tile_mask=jnp.asarray(part.tile_visited[0]))
+    args = (jnp.asarray(part.indices[0]), jnp.asarray(part.values[0]),
+            jnp.asarray(part.local_rows[0]),
+            jnp.asarray(part.block_to_tile[0]), factors)
+
+    def hlo(variant):
+        f = jax.jit(lambda *a: kops.mttkrp_local(*a, variant=variant, **kw))
+        return f.lower(*args).as_text()
+
+    assert hlo("fused").count("gather") == 0
+    assert hlo("blocked").count('"stablehlo.gather"(') == 2  # 1/input mode
+
+
+def test_autotune_smoke(tmp_path, monkeypatch):
+    """Tiny-grid autotune run: returns a config from the grid, persists it,
+    and the second call is served from the on-disk cache."""
+    from repro.kernels import autotune as at
+    monkeypatch.setenv(at.ENV_CACHE, str(tmp_path / "cache.json"))
+    at._MEMO.clear()
+    kw = dict(variant="fused", nnz=256, tiles=(8,), block_ps=(64, 128),
+              num_buffers_grid=(2,), repeats=1)
+    cfg = at.autotune_ec(3, 8, **kw)
+    assert cfg.tile == 8 and cfg.block_p in (64, 128) and cfg.num_buffers == 2
+    assert len(cfg.timings) == 2
+    at._MEMO.clear()  # force the disk-cache path
+    cfg2 = at.autotune_ec(3, 8, **kw)
+    assert (cfg2.tile, cfg2.block_p, cfg2.num_buffers) == \
+        (cfg.tile, cfg.block_p, cfg.num_buffers)
+    # a different candidate grid must NOT reuse the cached winner
+    cfg3 = at.autotune_ec(3, 8, **{**kw, "tiles": (16,)})
+    assert cfg3.tile == 16

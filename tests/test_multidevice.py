@@ -12,6 +12,7 @@ import pytest
 SCRIPT = r"""
 import json
 import numpy as np, jax, jax.numpy as jnp
+from repro.compat import shard_map
 from repro.core.coo import random_sparse, to_dense
 from repro.core.partition import build_plan
 from repro.core import mttkrp as M
@@ -32,10 +33,10 @@ def ring_fn(x):
 def ag_fn(x):
     return exchange.all_gather_axes(x, ("group", "sub"), ring=False)
 
-ring = jax.jit(jax.shard_map(ring_fn, mesh=mesh, in_specs=P(("group", "sub")),
-                             out_specs=P(None), check_vma=False))(x)
-ag = jax.jit(jax.shard_map(ag_fn, mesh=mesh, in_specs=P(("group", "sub")),
-                           out_specs=P(None), check_vma=False))(x)
+ring = jax.jit(shard_map(ring_fn, mesh=mesh, in_specs=P(("group", "sub")),
+                             out_specs=P(None)))(x)
+ag = jax.jit(shard_map(ag_fn, mesh=mesh, in_specs=P(("group", "sub")),
+                           out_specs=P(None)))(x)
 results["ring_equals_allgather"] = bool(np.allclose(ring, ag))
 results["ring_equals_input"] = bool(np.allclose(ring, x))
 
@@ -83,6 +84,9 @@ k_out = M.distributed_mttkrp(plan, 0, cmesh, dev, factors, use_kernel=True)
 j_out = M.distributed_mttkrp(plan, 0, cmesh, dev, factors, use_kernel=False)
 results["kernel_matches_jnp_8dev"] = bool(
     np.allclose(np.asarray(k_out), np.asarray(j_out), atol=2e-3))
+f_out = M.distributed_mttkrp(plan, 0, cmesh, dev, factors, variant="fused")
+results["fused_matches_jnp_8dev"] = bool(
+    np.allclose(np.asarray(f_out), np.asarray(j_out), atol=2e-3))
 
 # --- ALS converges on 8 devices ------------------------------------------
 from repro.core.decompose import cp_decompose
@@ -112,10 +116,9 @@ def comp(g, r):
                                     {"w": r.reshape(128)}, "data")
     return out["w"], res["w"]
 
-out, _ = jax.jit(jax.shard_map(comp, mesh=dmesh,
+out, _ = jax.jit(shard_map(comp, mesh=dmesh,
                                in_specs=(P("data"), P("data")),
-                               out_specs=(P(), P("data")),
-                               check_vma=False))(gs, jnp.zeros_like(gs))
+                               out_specs=(P(), P("data"))))(gs, jnp.zeros_like(gs))
 true_mean = np.asarray(gs).mean(0)
 rel = np.abs(np.asarray(out) - true_mean).max() / np.abs(true_mean).max()
 results["compressed_psum_rel_err"] = float(rel)
@@ -140,6 +143,7 @@ def test_multidevice_battery():
     assert results["ring_equals_input"]
     assert results["mttkrp_all_strategies"]
     assert results["kernel_matches_jnp_8dev"]
+    assert results["fused_matches_jnp_8dev"]
     assert results["als_monotone"], results["als_fits"]
     assert results["elastic_resumed"], results["elastic_fits"]
     assert results["compressed_psum_ok"], results["compressed_psum_rel_err"]

@@ -1,7 +1,7 @@
 """Property tests for the AMPED partitioning invariants (paper §3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.coo import random_sparse
 from repro.core.partition import (auto_replication, build_plan,

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.training import optimizer as opt_mod
 from repro.training.compression import (compressed_psum_tree,
                                         dequantize_int8, quantize_int8)
@@ -86,9 +87,8 @@ def test_compressed_psum_single_device():
     def f(g, r):
         return compressed_psum_tree(g, r, "data")
 
-    out, res = jax.jit(jax.shard_map(
-        f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-        check_vma=False))(g, r0)
+    out, res = jax.jit(shard_map(
+        f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P())))(g, r0)
     np.testing.assert_allclose(np.asarray(out["w"]) + np.asarray(res["w"]),
                                np.asarray(g["w"]), atol=1e-5)
 
@@ -102,8 +102,8 @@ def test_error_feedback_reduces_bias():
     def f(g, r):
         return compressed_psum_tree({"w": g}, {"w": r}, "data")
 
-    fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P(), P()),
-                               out_specs=(P(), P()), check_vma=False))
+    fn = jax.jit(shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                               out_specs=(P(), P())))
     r = jnp.zeros_like(g_true)
     acc = np.zeros(32)
     n = 50
