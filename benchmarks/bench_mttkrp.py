@@ -69,6 +69,7 @@ def _gather_free(run, args) -> bool:
 
 def bench_point(nmodes: int, rank: int, nnz: int, *, repeats: int = 3,
                 seed: int = 0) -> dict:
+    from repro.api import KernelConfig
     from repro.kernels import ops as kops
     from repro.kernels.autotune import representative_shard
 
@@ -88,18 +89,22 @@ def bench_point(nmodes: int, rank: int, nnz: int, *, repeats: int = 3,
              "nnz_padded": nnz_pad, "tile": part.tile,
              "block_p": part.block_p, "variants": {}}
     for variant in VARIANTS:
+        # resolve variant + ring depth the way the public API does
+        kernel_kw = KernelConfig(use_kernel=True, variant=variant
+                                 ).mttkrp_kwargs(nmodes=nmodes, rank=rank)
+
         def run(indices, values, local_rows, block_to_tile, facs,
-                _v=variant):
+                _kw=kernel_kw):
             return kops.mttkrp_local(
                 indices, values, local_rows, block_to_tile, facs,
                 mode=0, num_rows=part.rows_max, tile=part.tile,
-                block_p=part.block_p, variant=_v, tile_mask=mask)
+                block_p=part.block_p, tile_mask=mask, **_kw)
 
         jitted = jax.jit(run)
         dt = timeit(lambda: jitted(*args).block_until_ready(),
                     repeats=repeats)
         hbm = modelled_hbm_bytes(variant, nnz_pad, rank, nin, part.rows_max,
-                                 num_buffers=2)
+                                 num_buffers=kernel_kw["num_buffers"])
         point["variants"][variant] = {
             "time_s": dt,
             "gflops_per_s": flops / dt / 1e9,

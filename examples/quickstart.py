@@ -1,14 +1,15 @@
-"""Quickstart: decompose a sparse tensor with AMPED-distributed CP-ALS.
+"""Quickstart: the plan/compile/execute API on a synthetic tensor.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Uses every layer of the public API: synthetic tensor → partitioning plan →
-distributed MTTKRP → ALS sweeps → factors + fit.
+Three staged calls — config, plan (preprocessing, reusable/cacheable),
+compile (mesh + sharded arrays + jitted updates), then execution.
 """
 import numpy as np
 
+import repro.api as api
 from repro.core.coo import random_sparse
-from repro.core.decompose import cp_decompose
+
 
 def main():
     # a skewed 3-mode tensor (Twitch-like hot indices)
@@ -16,14 +17,18 @@ def main():
                            distribution="zipf", zipf_a=1.3)
     print(f"tensor: shape={tensor.shape} nnz={tensor.nnz}")
 
-    result = cp_decompose(
-        tensor,
-        rank=16,
-        strategy="amped_cdf",    # the paper's output-mode sharding
-        iters=5,
-        ring=True,               # Algorithm-3 ring exchange
-        verbose=True,
-    )
+    # 1. config — the paper's setup (CDF sharding, r=1, ring exchange),
+    #    overridden with a smaller rank for the demo
+    cfg = api.preset("paper", {"rank": 16})
+
+    # 2. plan — partition every mode once (pure host work; pass cache_dir=
+    #    to reuse this across runs and processes)
+    plan = api.plan(tensor, cfg)
+
+    # 3. compile + execute — the solver owns mesh, shards and jitted updates
+    solver = api.compile(plan, cfg)
+    result = solver.run(5, verbose=True)
+
     print(f"\nfits per sweep: {[round(f, 4) for f in result.fits]}")
     print(f"factor shapes: {[f.shape for f in result.factors]}")
     print(f"lambda[:5] = {np.round(result.lam[:5], 3)}")

@@ -1,0 +1,37 @@
+"""repro.api — the public plan/compile/execute surface.
+
+Three stages, matching the paper's own reporting split (preprocessing is
+timed separately from execution because the plan is reused across the whole
+decomposition, and across processes via the plan cache):
+
+    import repro.api as api
+
+    cfg    = api.preset("paper")                    # or optimized / fused
+    plan   = api.plan(tensor, cfg, cache_dir="plans/")   # preprocess once
+    solver = api.compile(plan, cfg)                 # mesh + shards + jit
+    result = solver.run(iters=10)                   # CPResult
+
+Everything else (``save_plan``/``load_plan``, ``solver.sweep()``,
+``solver.checkpoint()/restore()``, dotted `--set`-style overrides) hangs off
+these three calls. The legacy ``repro.core.decompose.cp_decompose`` is a
+deprecated shim over exactly this pipeline.
+"""
+from repro.api.config import (DecomposeConfig, ExchangeConfig, KernelConfig,
+                              PartitionConfig, PRESETS, RuntimeConfig,
+                              apply_set_args, fused, optimized, paper, preset)
+from repro.api.planning import (CACHE_STATS, PlanSignatureError, load_plan,
+                                plan, plan_signature, reset_cache_stats,
+                                save_plan)
+from repro.api.solver import CPSolver, compile
+
+__all__ = [
+    # config layer
+    "DecomposeConfig", "PartitionConfig", "KernelConfig", "ExchangeConfig",
+    "RuntimeConfig", "paper", "optimized", "fused", "preset", "PRESETS",
+    "apply_set_args",
+    # plan layer
+    "plan", "plan_signature", "save_plan", "load_plan", "PlanSignatureError",
+    "CACHE_STATS", "reset_cache_stats",
+    # execute layer
+    "compile", "CPSolver",
+]

@@ -1,0 +1,264 @@
+"""Typed configuration for the plan/compile/execute API.
+
+A :class:`DecomposeConfig` is a frozen composition of four orthogonal
+sub-configs, mirroring the stages of the AMPED pipeline:
+
+  * :class:`PartitionConfig` — what the preprocessing (``api.plan``) does:
+    sharding strategy, intra-group replication, kernel blocking geometry.
+  * :class:`KernelConfig`    — which EC implementation executes the MTTKRP
+    hot loop and its launch parameters (variant, DMA ring depth, autotune).
+  * :class:`ExchangeConfig`  — how partial factors move between devices
+    (paper Algorithm-3 ring vs XLA's native all-gather).
+  * :class:`RuntimeConfig`   — where and how the solve runs: device count,
+    checkpoint directory, convergence tolerance, RNG seed.
+
+Presets :func:`paper`, :func:`optimized` and :func:`fused` name the three
+configurations the repo ships (the paper's §5.1 setup and the two
+beyond-paper kernel paths); ``preset("paper")`` looks one up by name.
+
+Configs are plain data: hashable, JSON-round-trippable (:meth:`to_dict` /
+:meth:`from_dict`) and overridable with dotted paths
+(``cfg.with_overrides({"kernel.variant": "fused"})`` or, from a CLI,
+``apply_set_args(cfg, ["kernel.variant=fused", "runtime.tol=0"])``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Mapping, Sequence
+
+from repro.core.partition import Strategy
+
+__all__ = [
+    "PartitionConfig",
+    "KernelConfig",
+    "ExchangeConfig",
+    "RuntimeConfig",
+    "DecomposeConfig",
+    "paper",
+    "optimized",
+    "fused",
+    "preset",
+    "PRESETS",
+    "apply_set_args",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionConfig:
+    """Preprocessing knobs — everything that shapes the :class:`CPPlan`."""
+
+    strategy: Strategy = "amped_cdf"
+    replication: int | None = 1     # None = auto per-mode pick (beyond-paper)
+    tile: int | None = None         # None = partitioner default (or autotune)
+    block_p: int | None = None      # None = partitioner default (or autotune)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """EC kernel selection and launch parameters (see repro.kernels.ops)."""
+
+    use_kernel: bool = False        # False + variant=None → "ref" (jnp oracle)
+    variant: str | None = None      # "ref" | "blocked" | "fused" | None = env
+    num_buffers: int | None = None  # fused DMA ring depth (None = 2/autotuned)
+    autotune: bool = False          # sweep (tile, block_p, num_buffers)
+
+    def resolved_variant(self) -> str:
+        """Resolve to a concrete variant name (argument > env > default)."""
+        from repro.kernels import ops as kops
+        return kops.resolve_variant(self.variant, self.use_kernel)
+
+    def mttkrp_kwargs(self, *, nmodes: int | None = None,
+                      rank: int | None = None) -> dict:
+        """Kwargs for ``make_mttkrp_fn``/``mttkrp_local``, resolved once.
+        Pass ``nmodes``/``rank`` so ``autotune=True`` can pick up the tuned
+        ``num_buffers`` (without them, autotune only affects the blocking
+        geometry chosen at plan time)."""
+        from repro.kernels import ops as kops
+        return kops.kernel_kwargs_from_config(self, nmodes=nmodes, rank=rank)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeConfig:
+    """Inter-device factor exchange (paper Algorithm 3)."""
+
+    ring: bool = True               # True = ring all-gather, False = native
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Execution environment: devices, fault tolerance, convergence."""
+
+    num_devices: int | None = None  # None = all visible devices
+    checkpoint_dir: str | None = None
+    tol: float = 1e-5               # |fit_k - fit_{k-1}| < tol stops the run
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DecomposeConfig:
+    """One CP decomposition, fully specified (minus the tensor and iters)."""
+
+    rank: int = 32
+    partition: PartitionConfig = dataclasses.field(
+        default_factory=PartitionConfig)
+    kernel: KernelConfig = dataclasses.field(default_factory=KernelConfig)
+    exchange: ExchangeConfig = dataclasses.field(
+        default_factory=ExchangeConfig)
+    runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "DecomposeConfig":
+        return cls(
+            rank=int(d.get("rank", 32)),
+            partition=PartitionConfig(**d.get("partition", {})),
+            kernel=KernelConfig(**d.get("kernel", {})),
+            exchange=ExchangeConfig(**d.get("exchange", {})),
+            runtime=RuntimeConfig(**d.get("runtime", {})),
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "DecomposeConfig":
+        return cls.from_dict(json.loads(s))
+
+    # -- legacy bridge -------------------------------------------------------
+    @classmethod
+    def from_legacy_kwargs(
+        cls, *, rank: int = 32, num_devices: int | None = None,
+        strategy: Strategy = "amped_cdf", replication: int | None = None,
+        tol: float = 1e-5, seed: int = 0, use_kernel: bool = False,
+        kernel_variant: str | None = None, num_buffers: int | None = None,
+        autotune: bool = False, ring: bool = True,
+        checkpoint_dir: str | None = None,
+    ) -> "DecomposeConfig":
+        """Build a config from the historical ``cp_decompose`` kwargs."""
+        return cls(
+            rank=rank,
+            partition=PartitionConfig(strategy=strategy,
+                                      replication=replication),
+            kernel=KernelConfig(use_kernel=use_kernel, variant=kernel_variant,
+                                num_buffers=num_buffers, autotune=autotune),
+            exchange=ExchangeConfig(ring=ring),
+            runtime=RuntimeConfig(num_devices=num_devices,
+                                  checkpoint_dir=checkpoint_dir,
+                                  tol=tol, seed=seed),
+        )
+
+    # -- dotted overrides -----------------------------------------------------
+    def with_overrides(self, overrides: Mapping[str, Any]) -> "DecomposeConfig":
+        """Replace fields by dotted path, e.g. ``{"kernel.variant": "fused",
+        "runtime.tol": 0.0, "rank": 64}``. Unknown paths raise ValueError."""
+        cfg = self
+        for key, value in overrides.items():
+            parts = key.split(".")
+            if len(parts) == 1:
+                if parts[0] in _SECTIONS:
+                    expected = type(getattr(cfg, parts[0]))
+                    if not isinstance(value, expected):
+                        raise ValueError(
+                            f"config section {parts[0]!r} can only be "
+                            f"replaced by a {expected.__name__}; use a "
+                            f"dotted path like '{parts[0]}.<field>' for "
+                            f"scalar overrides")
+                cfg = _replace_checked(cfg, parts[0], value)
+            elif len(parts) == 2:
+                section, field = parts
+                if section not in _SECTIONS:
+                    raise ValueError(
+                        f"unknown config section {section!r}; expected one of "
+                        f"{sorted(_SECTIONS)} (or top-level 'rank')")
+                sub = _replace_checked(getattr(cfg, section), field, value)
+                cfg = dataclasses.replace(cfg, **{section: sub})
+            else:
+                raise ValueError(f"override path too deep: {key!r}")
+        return cfg
+
+
+_SECTIONS = ("partition", "kernel", "exchange", "runtime")
+
+
+def _replace_checked(obj, field: str, value):
+    names = {f.name for f in dataclasses.fields(obj)}
+    if field not in names:
+        raise ValueError(
+            f"{type(obj).__name__} has no field {field!r}; "
+            f"expected one of {sorted(names)}")
+    return dataclasses.replace(obj, **{field: value})
+
+
+def _parse_value(raw: str):
+    """CLI value parsing: None/booleans case-insensitively ('None', 'False',
+    'TRUE', ...), then JSON ('1e-4', '3', '"x"'), else the raw string."""
+    low = raw.strip().lower()
+    if low in ("none", "null"):
+        return None
+    if low == "true":
+        return True
+    if low == "false":
+        return False
+    try:
+        return json.loads(raw)
+    except (json.JSONDecodeError, ValueError):
+        return raw
+
+
+def apply_set_args(cfg: DecomposeConfig,
+                   set_args: Sequence[str]) -> DecomposeConfig:
+    """Apply launcher-style ``--set key=value`` overrides (dotted keys)."""
+    overrides = {}
+    for item in set_args or ():
+        if "=" not in item:
+            raise ValueError(f"--set expects key=value, got {item!r}")
+        key, _, raw = item.partition("=")
+        overrides[key.strip()] = _parse_value(raw)
+    return cfg.with_overrides(overrides)
+
+
+# -- presets ------------------------------------------------------------------
+
+def paper(overrides: Mapping[str, Any] | None = None) -> DecomposeConfig:
+    """The paper's §5.1 configuration: CDF partitioning, r=1 (no intra-group
+    merge), Algorithm-3 ring exchange, jnp reference EC."""
+    return DecomposeConfig(
+        partition=PartitionConfig(strategy="amped_cdf", replication=1),
+        kernel=KernelConfig(use_kernel=False),
+        exchange=ExchangeConfig(ring=True),
+    ).with_overrides(overrides or {})
+
+
+def optimized(overrides: Mapping[str, Any] | None = None) -> DecomposeConfig:
+    """Beyond-paper: auto hierarchical replication + blocked Pallas EC."""
+    return DecomposeConfig(
+        partition=PartitionConfig(strategy="amped_cdf", replication=None),
+        kernel=KernelConfig(use_kernel=True, variant="blocked"),
+        exchange=ExchangeConfig(ring=True),
+    ).with_overrides(overrides or {})
+
+
+def fused(overrides: Mapping[str, Any] | None = None) -> DecomposeConfig:
+    """Beyond-paper: fused in-kernel gather EC with double-buffered HBM
+    streaming + autotuned (tile, block_p, num_buffers)."""
+    return DecomposeConfig(
+        partition=PartitionConfig(strategy="amped_cdf", replication=None),
+        kernel=KernelConfig(use_kernel=True, variant="fused", autotune=True),
+        exchange=ExchangeConfig(ring=True),
+    ).with_overrides(overrides or {})
+
+
+PRESETS = {"paper": paper, "optimized": optimized, "fused": fused}
+
+
+def preset(name: str,
+           overrides: Mapping[str, Any] | None = None) -> DecomposeConfig:
+    """Look up a named preset (``paper`` | ``optimized`` | ``fused``)."""
+    if name not in PRESETS:
+        raise ValueError(f"unknown preset {name!r}; expected one of "
+                         f"{sorted(PRESETS)}")
+    return PRESETS[name](overrides)

@@ -1,0 +1,217 @@
+"""Plan layer: preprocessing once, reuse everywhere.
+
+AMPED's pipeline is staged — partition/preprocess once, then many MTTKRP+ALS
+sweeps — and at billion scale the preprocessing is minutes of host work. This
+module makes that stage a first-class, serializable artifact:
+
+    cfg  = api.preset("paper")
+    plan = api.plan(tensor, cfg, cache_dir="plans/")   # built once
+    plan = api.plan(tensor, cfg, cache_dir="plans/")   # cache hit, no repartition
+
+``plan()`` keys the on-disk cache by a **content signature** of the tensor
+(shape, nnz, a strided sample digest of indices/values) and of every
+partition-relevant config field (strategy, replication, resolved tile /
+block_p, device count) — the same discipline ``kernels/autotune.py`` applies
+to its winner cache: an entry is only reused when the signature that produced
+it matches exactly; anything else rebuilds. ``save_plan``/``load_plan`` are
+the underlying serialization (npz arrays + JSON manifest) and can also be
+used directly to ship a plan between processes or hosts.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.api.config import DecomposeConfig
+from repro.core import partition as partition_mod
+from repro.core.coo import SparseTensor
+from repro.core.partition import CPPlan, ModePartition
+
+__all__ = ["plan", "plan_signature", "save_plan", "load_plan",
+           "PlanSignatureError", "CACHE_STATS", "reset_cache_stats"]
+
+PLAN_FORMAT_VERSION = 1
+_SAMPLE_CAP = 65536  # strided digest sample size (cheap at billion scale)
+
+# Observability for tests and ops dashboards: how often plan() rebuilt vs
+# reused. Process-wide; reset with reset_cache_stats().
+CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def reset_cache_stats() -> None:
+    CACHE_STATS["hits"] = 0
+    CACHE_STATS["misses"] = 0
+
+
+class PlanSignatureError(ValueError):
+    """A stored plan's signature does not match the requesting problem."""
+
+
+def _tensor_digest(t: SparseTensor) -> str:
+    """Cheap content digest: shape/nnz plus a strided sample of coordinates
+    and values. O(min(nnz, _SAMPLE_CAP)) — never a full scan at billion
+    scale, yet any nnz/shape change and almost any data change re-keys."""
+    h = hashlib.sha256()
+    h.update(repr((tuple(int(s) for s in t.shape), int(t.nnz))).encode())
+    if t.nnz:
+        step = max(1, t.nnz // _SAMPLE_CAP)
+        h.update(np.ascontiguousarray(t.indices[::step]).tobytes())
+        h.update(np.ascontiguousarray(t.values[::step]).tobytes())
+    return h.hexdigest()
+
+
+def _resolve_geometry(tensor_nmodes: int, config: DecomposeConfig
+                      ) -> tuple[int | None, int | None]:
+    """Resolve (tile, block_p) the way ``cp_decompose`` historically did:
+    explicit partition config > autotuned winner > partitioner defaults
+    (returned as None so the partitioner applies them)."""
+    tile, block_p = config.partition.tile, config.partition.block_p
+    if config.kernel.autotune:
+        variant = config.kernel.resolved_variant()
+        if variant != "ref":  # ref ignores the blocking geometry
+            from repro.kernels.autotune import autotune_ec
+            tuned = autotune_ec(tensor_nmodes, config.rank, variant=variant)
+            if tile is None:
+                tile = tuned.tile
+            if block_p is None:
+                block_p = tuned.block_p
+    return tile, block_p
+
+
+def _resolve_num_devices(config: DecomposeConfig,
+                         num_devices: int | None) -> int:
+    if num_devices is not None:
+        return num_devices
+    if config.runtime.num_devices is not None:
+        return config.runtime.num_devices
+    return len(jax.devices())
+
+
+def plan_signature(tensor: SparseTensor, config: DecomposeConfig, *,
+                   num_devices: int | None = None) -> str:
+    """Content signature keying the plan cache: tensor identity + every
+    config field that changes the partition output."""
+    nd = _resolve_num_devices(config, num_devices)
+    tile, block_p = _resolve_geometry(tensor.nmodes, config)
+    payload = {
+        "format": PLAN_FORMAT_VERSION,
+        "tensor": _tensor_digest(tensor),
+        "num_devices": nd,
+        "strategy": config.partition.strategy,
+        "replication": config.partition.replication,
+        "tile": tile,
+        "block_p": block_p,
+    }
+    return hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()
+
+
+# -- serialization ------------------------------------------------------------
+
+def save_plan(p: CPPlan, path: str, *, signature: str | None = None) -> str:
+    """Write a plan to ``path`` (a directory): ``manifest.json`` with all
+    scalar metadata (+ optional signature) and ``arrays.npz`` with every
+    ModePartition array plus the global↔padded translations, bit-exact."""
+    os.makedirs(path, exist_ok=True)
+    arrays: dict[str, np.ndarray] = {}
+    manifest = {
+        "format_version": PLAN_FORMAT_VERSION,
+        "signature": signature,
+        "shape": [int(s) for s in p.shape],
+        "num_devices": int(p.num_devices),
+        "norm": float(p.norm),
+        "modes": [],
+    }
+    for d, part in enumerate(p.modes):
+        manifest["modes"].append(
+            {k: int(getattr(part, k)) for k in ModePartition.META_FIELDS})
+        for k in ModePartition.ARRAY_FIELDS:
+            arrays[f"mode{d}_{k}"] = getattr(part, k)
+        arrays[f"g2p_{d}"] = np.asarray(p.global_to_padded[d])
+        arrays[f"p2g_{d}"] = np.asarray(p.padded_to_global[d])
+    tmp = os.path.join(path, "arrays.npz.tmp")
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def load_plan(path: str, *, expect_signature: str | None = None) -> CPPlan:
+    """Load a plan saved by :func:`save_plan`. If ``expect_signature`` is
+    given and the stored manifest's signature differs (different tensor,
+    strategy, device count, ...), raise :class:`PlanSignatureError` rather
+    than silently handing back a plan for another problem."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("format_version") != PLAN_FORMAT_VERSION:
+        raise PlanSignatureError(
+            f"plan at {path!r} has format {manifest.get('format_version')}, "
+            f"expected {PLAN_FORMAT_VERSION}")
+    if expect_signature is not None and \
+            manifest.get("signature") != expect_signature:
+        raise PlanSignatureError(
+            f"plan at {path!r} was built for a different problem "
+            f"(stored signature {str(manifest.get('signature'))[:16]}…, "
+            f"expected {expect_signature[:16]}…)")
+    with np.load(os.path.join(path, "arrays.npz")) as npz:
+        modes, g2ps, p2gs = [], [], []
+        for d, meta in enumerate(manifest["modes"]):
+            fields = {k: int(meta[k]) for k in ModePartition.META_FIELDS}
+            fields.update(
+                {k: npz[f"mode{d}_{k}"] for k in ModePartition.ARRAY_FIELDS})
+            modes.append(ModePartition(**fields))
+            g2ps.append(npz[f"g2p_{d}"])
+            p2gs.append(npz[f"p2g_{d}"])
+    return CPPlan(
+        shape=tuple(manifest["shape"]),
+        num_devices=int(manifest["num_devices"]),
+        modes=tuple(modes),
+        global_to_padded=tuple(g2ps),
+        padded_to_global=tuple(p2gs),
+        norm=float(manifest["norm"]),
+    )
+
+
+# -- the public entry ---------------------------------------------------------
+
+def plan(tensor: SparseTensor, config: DecomposeConfig, *,
+         cache_dir: str | None = None,
+         num_devices: int | None = None) -> CPPlan:
+    """Preprocess ``tensor`` for ``config``: autotune the blocking geometry
+    (if requested), partition every mode, and — when ``cache_dir`` is given —
+    reuse an on-disk plan with a matching content signature instead of
+    repartitioning. Pure host work; returns a :class:`CPPlan`.
+    """
+    nd = _resolve_num_devices(config, num_devices)
+    tile, block_p = _resolve_geometry(tensor.nmodes, config)
+
+    sig = None
+    if cache_dir is not None:
+        sig = plan_signature(tensor, config, num_devices=nd)
+        entry = os.path.join(cache_dir, sig[:32])
+        if os.path.exists(os.path.join(entry, "manifest.json")):
+            try:
+                p = load_plan(entry, expect_signature=sig)
+                CACHE_STATS["hits"] += 1
+                return p
+            except (PlanSignatureError, OSError, KeyError, ValueError):
+                pass  # corrupted/stale entry: rebuild below and overwrite
+
+    CACHE_STATS["misses"] += 1
+    p = partition_mod.build_plan(
+        tensor, nd, strategy=config.partition.strategy,
+        replication=config.partition.replication, tile=tile, block_p=block_p)
+    if cache_dir is not None:
+        try:
+            save_plan(p, os.path.join(cache_dir, sig[:32]), signature=sig)
+        except OSError:
+            pass  # read-only filesystems: the plan still works in-process
+    return p

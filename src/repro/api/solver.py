@@ -1,0 +1,153 @@
+"""Execute layer: ``compile(plan, config) -> CPSolver``.
+
+A :class:`CPSolver` is the session object that owns everything expensive:
+the device mesh, the sharded per-mode tensor copies, and the jitted per-mode
+ALS updates (with donated factor buffers). Building one pays the device
+placement and trace/compile cost once; after that, sweeps are pure enqueued
+device work:
+
+    solver = api.compile(plan, cfg)
+    solver.restore()            # optional: elastic resume from checkpoints
+    result = solver.run(iters)  # CPResult — or step with solver.sweep()
+
+The solver is deliberately *not* serializable — that's the plan's job
+(:mod:`repro.api.planning`) plus the checkpoint manager's
+(:mod:`repro.training.checkpoint`). ``checkpoint()``/``restore()`` store
+GLOBAL-layout factors, so a checkpoint taken by a solver compiled for m
+devices restores into one compiled for m' devices (elastic re-pad into the
+new plan's ownership layout).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.api.config import DecomposeConfig
+from repro.core import als as als_mod
+from repro.core import mttkrp as dmttkrp
+from repro.core.decompose import CPResult
+from repro.core.partition import CPPlan
+
+__all__ = ["CPSolver", "compile"]
+
+
+class CPSolver:
+    """A compiled CP-ALS session: mesh + sharded tensor copies + jitted
+    updates + current :class:`~repro.core.als.ALSState`."""
+
+    def __init__(self, plan: CPPlan, config: DecomposeConfig, mesh: Mesh):
+        self.plan = plan
+        self.config = config
+        self.mesh = mesh
+        self.dev_arrays = [dmttkrp.shard_plan_mode(p, mesh)
+                           for p in plan.modes]
+        kernel_kw = config.kernel.mttkrp_kwargs(nmodes=plan.nmodes,
+                                                rank=config.rank)
+        self.updates = als_mod.make_sweep_updates(
+            plan, mesh, ring=config.exchange.ring, **kernel_kw)
+        self._ckpt_mgr = None
+        if config.runtime.checkpoint_dir is not None:
+            from repro.training.checkpoint import CheckpointManager
+            self._ckpt_mgr = CheckpointManager(config.runtime.checkpoint_dir)
+        self.reset()
+
+    # -- state lifecycle ---------------------------------------------------
+    def reset(self) -> None:
+        """(Re)initialize factors from the config seed; sweep counter to 0."""
+        rank = self.config.rank
+        factors = als_mod.init_factors(self.plan, rank,
+                                       seed=self.config.runtime.seed)
+        grams = [f.T @ f for f in factors]
+        self.state = als_mod.ALSState(factors=factors, lam=jnp.ones(rank),
+                                      grams=grams)
+
+    def restore(self, step: int | None = None) -> bool:
+        """Elastic resume: load the latest (or given) verified checkpoint and
+        re-pad its GLOBAL-layout factors into THIS plan's ownership layout —
+        the checkpoint may have been written under any device count. Returns
+        True iff a checkpoint was restored."""
+        if self._ckpt_mgr is None:
+            raise ValueError("no checkpoint_dir configured in "
+                             "config.runtime; nothing to restore from")
+        if step is None:
+            restored = self._ckpt_mgr.restore_latest()
+        else:
+            payload = self._ckpt_mgr.restore(step)
+            restored = None if payload is None else (payload, step)
+        if restored is None:
+            return False
+        payload, step = restored
+        rank = self.config.rank
+        factors = []
+        for w, fg in enumerate(payload["factors"]):
+            fp = np.zeros((self.plan.modes[w].padded_rows, rank), np.float32)
+            fp[self.plan.global_to_padded[w]] = fg
+            factors.append(jnp.asarray(fp))
+        grams = [f.T @ f for f in factors]
+        self.state = als_mod.ALSState(
+            factors=factors, lam=jnp.asarray(payload["lam"]), grams=grams,
+            sweep=step, fits=list(payload.get("fits", [])))
+        return True
+
+    def checkpoint(self) -> None:
+        """Write the current state (GLOBAL-layout factors) at its sweep."""
+        if self._ckpt_mgr is None:
+            raise ValueError("no checkpoint_dir configured in config.runtime")
+        s = self.state
+        self._ckpt_mgr.save(s.sweep, {
+            "factors": als_mod.unpad_factors(self.plan, s.factors),
+            "lam": np.asarray(s.lam),
+            "fits": np.asarray([float(f) for f in s.fits], np.float64),
+        })
+
+    # -- execution ---------------------------------------------------------
+    def sweep(self) -> als_mod.ALSState:
+        """One full ALS sweep (all modes). Enqueues device work only; the
+        appended fit is a device scalar (reading it blocks the host)."""
+        self.state = als_mod.als_sweep(self.plan, self.mesh, self.dev_arrays,
+                                       self.state, self.updates)
+        return self.state
+
+    def run(self, iters: int, *, tol: float | None = None,
+            verbose: bool = False) -> CPResult:
+        """Sweep until ``iters`` total sweeps or the fit plateaus below
+        ``tol`` (default: config.runtime.tol). Checkpoints every sweep when a
+        checkpoint_dir is configured. Resumes from the current state's sweep
+        counter, so ``restore(); run(iters)`` continues where the checkpoint
+        left off."""
+        if tol is None:
+            tol = self.config.runtime.tol
+        for _ in range(self.state.sweep, iters):
+            state = self.sweep()
+            if verbose:
+                print(f"sweep {state.sweep}: fit={float(state.fits[-1]):.6f}")
+            if self._ckpt_mgr is not None:
+                self.checkpoint()
+            if tol > 0 and len(state.fits) >= 2 and \
+                    abs(float(state.fits[-1]) - float(state.fits[-2])) < tol:
+                break
+        return self.result()
+
+    def result(self) -> CPResult:
+        """Snapshot the current state as a host-side :class:`CPResult`
+        (forces a sync: factors unpadded to global layout, fits to floats)."""
+        s = self.state
+        return CPResult(
+            factors=als_mod.unpad_factors(self.plan, s.factors),
+            lam=np.asarray(s.lam),
+            fits=[float(f) for f in s.fits],
+            plan=self.plan,
+            sweeps=s.sweep,
+        )
+
+
+def compile(plan: CPPlan, config: DecomposeConfig, *,
+            mesh: Mesh | None = None) -> CPSolver:
+    """Build a :class:`CPSolver` for ``plan`` under ``config``: construct the
+    (group, sub) mesh (unless one is passed), place every mode's shards, and
+    build the jitted per-mode updates. Device-touching but tensor-data-free —
+    cheap relative to ``plan()`` at scale."""
+    if mesh is None:
+        mesh = dmttkrp.cp_mesh(plan.num_devices, plan.modes[0].r)
+    return CPSolver(plan, config, mesh)

@@ -1,61 +1,84 @@
-"""The paper's own experimental configuration (§5.1).
+"""The paper's own experimental configuration (§5.1), as API presets.
 
 Datasets: the four public billion-scale tensors (Table 3) — profiles in
 repro.sparse.io.DATASET_PROFILES. Rank R=32, threadblock P(θ)=32 (our
 kernel block_p defaults scale this up for MXU alignment), 4 devices on one
-node. ``paper_setup()`` returns the decomposition kwargs that reproduce the
-paper's configuration at a given scale on this container.
+node.
+
+:func:`paper_config` pins those paper constants onto a named
+:mod:`repro.api` preset::
+
+    cfg = paper_config("paper")       # the §5.1 configuration
+    cfg = paper_config("fused")       # beyond-paper fused EC + autotune
+
+The old ``paper_setup``/``optimized_setup``/``fused_setup`` helpers are
+deprecated shims kept for one release: they still take the historical
+``PaperRun`` field names as keyword overrides (``num_devices=``,
+``use_kernel=``, ``kernel_variant=``, ...) but now return
+:class:`repro.api.DecomposeConfig` objects (the ``PaperRun`` kwargs-bag and
+its ``decompose_kwargs()`` are gone).
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
+from typing import Any, Mapping
 
+from repro.api.config import DecomposeConfig, preset as _preset
 from repro.sparse.io import DATASET_PROFILES
+
+__all__ = ["RANK", "PAPER_DEVICES", "paper_config",
+           "paper_setup", "optimized_setup", "fused_setup"]
 
 RANK = 32
 PAPER_DEVICES = 4
 
 
-@dataclasses.dataclass(frozen=True)
-class PaperRun:
-    profile: str
-    rank: int = RANK
-    num_devices: int = PAPER_DEVICES
-    strategy: str = "amped_cdf"
-    replication: int | None = 1      # paper scheme: no intra-group merge
-    ring: bool = True                # Algorithm-3 ring exchange
-    use_kernel: bool = False         # EC kernel (True = Pallas path)
-    kernel_variant: str | None = None  # "ref" | "blocked" | "fused" | None=env
-    num_buffers: int | None = None   # fused DMA ring depth (None=2/autotuned)
-    autotune: bool = False           # sweep (tile, block_p, num_buffers)
-
-    def decompose_kwargs(self) -> dict:
-        """kwargs for :func:`repro.core.decompose.cp_decompose`."""
-        return dict(
-            rank=self.rank, num_devices=self.num_devices,
-            strategy=self.strategy, replication=self.replication,
-            ring=self.ring, use_kernel=self.use_kernel,
-            kernel_variant=self.kernel_variant, num_buffers=self.num_buffers,
-            autotune=self.autotune)
+def paper_config(name: str = "paper",
+                 overrides: Mapping[str, Any] | None = None,
+                 ) -> DecomposeConfig:
+    """A :mod:`repro.api` preset with the paper's rank/device constants
+    applied. ``name`` is ``"paper" | "optimized" | "fused"``; ``overrides``
+    are dotted-path overrides applied last."""
+    cfg = _preset(name, {"rank": RANK, "runtime.num_devices": PAPER_DEVICES})
+    return cfg.with_overrides(overrides or {})
 
 
-def paper_setup(profile: str = "amazon", **overrides) -> PaperRun:
+# historical PaperRun field → dotted DecomposeConfig path
+_LEGACY_FIELDS = {
+    "rank": "rank",
+    "num_devices": "runtime.num_devices",
+    "strategy": "partition.strategy",
+    "replication": "partition.replication",
+    "ring": "exchange.ring",
+    "use_kernel": "kernel.use_kernel",
+    "kernel_variant": "kernel.variant",
+    "num_buffers": "kernel.num_buffers",
+    "autotune": "kernel.autotune",
+}
+
+
+def _deprecated_setup(name: str, profile: str,
+                      overrides: Mapping[str, Any]) -> DecomposeConfig:
+    warnings.warn(
+        f"{name}_setup() is deprecated; use "
+        f"repro.configs.amped_paper.paper_config({name!r}) or "
+        f"repro.api.preset({name!r})", DeprecationWarning, stacklevel=3)
     assert profile in DATASET_PROFILES, profile
-    return dataclasses.replace(PaperRun(profile=profile), **overrides)
+    mapped = {_LEGACY_FIELDS.get(k, k): v for k, v in overrides.items()}
+    return paper_config(name, mapped)
 
 
-def optimized_setup(profile: str = "amazon", **overrides) -> PaperRun:
-    """Beyond-paper: auto hierarchical replication + blocked Pallas EC."""
-    return dataclasses.replace(
-        PaperRun(profile=profile, replication=None, use_kernel=True,
-                 kernel_variant="blocked"),
-        **overrides)
+def paper_setup(profile: str = "amazon", **overrides) -> DecomposeConfig:
+    """Deprecated: use :func:`paper_config`. ``overrides`` take the old
+    ``PaperRun`` field names (or dotted config paths)."""
+    return _deprecated_setup("paper", profile, overrides)
 
 
-def fused_setup(profile: str = "amazon", **overrides) -> PaperRun:
-    """Beyond-paper: fused in-kernel gather EC with double-buffered HBM
-    streaming + autotuned (tile, block_p, num_buffers)."""
-    return dataclasses.replace(
-        PaperRun(profile=profile, replication=None, use_kernel=True,
-                 kernel_variant="fused", autotune=True),
-        **overrides)
+def optimized_setup(profile: str = "amazon", **overrides) -> DecomposeConfig:
+    """Deprecated: use ``paper_config("optimized")``."""
+    return _deprecated_setup("optimized", profile, overrides)
+
+
+def fused_setup(profile: str = "amazon", **overrides) -> DecomposeConfig:
+    """Deprecated: use ``paper_config("fused")``."""
+    return _deprecated_setup("fused", profile, overrides)

@@ -32,8 +32,9 @@ from jax.sharding import Mesh
 from repro.core import mttkrp as dmttkrp
 from repro.core.partition import CPPlan
 
-__all__ = ["ALSState", "init_factors", "make_mode_update", "als_sweep",
-           "fit_from_stats", "unpad_factors"]
+__all__ = ["ALSState", "init_factors", "make_mode_update",
+           "make_sweep_updates", "als_sweep", "fit_from_stats",
+           "unpad_factors"]
 
 
 @dataclasses.dataclass
@@ -96,6 +97,15 @@ def make_mode_update(plan: CPPlan, mode: int, mesh: Mesh, **mttkrp_kw) -> Callab
 
     donate = (0,) if jax.default_backend() != "cpu" else ()
     return jax.jit(update, donate_argnums=donate)
+
+
+def make_sweep_updates(plan: CPPlan, mesh: Mesh, **mttkrp_kw) -> list[Callable]:
+    """The jitted per-mode update list a multi-sweep caller needs: one
+    :func:`make_mode_update` closure per mode, sharing ``mttkrp_kw`` (kernel
+    variant, num_buffers, ring, ...). Build once, pass to every
+    :func:`als_sweep` — this is what :class:`repro.api.CPSolver` owns."""
+    return [make_mode_update(plan, d, mesh, **mttkrp_kw)
+            for d in range(plan.nmodes)]
 
 
 def fit_from_stats(norm_x: float, m_last, f_last, lam, grams) -> jax.Array:

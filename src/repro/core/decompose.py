@@ -1,27 +1,31 @@
-"""Public API: CP decomposition of a sparse tensor with AMPED distribution.
+"""Legacy entry point: CP decomposition of a sparse tensor in one call.
 
-    from repro.core.decompose import cp_decompose
-    result = cp_decompose(tensor, rank=32, num_devices=4, iters=10)
+.. deprecated::
+    ``cp_decompose`` is a thin shim over the staged public API in
+    :mod:`repro.api` — prefer::
 
-Handles preprocessing (partitioning), device placement, the ALS loop with
-convergence tolerance, and optional checkpoint/restart (fault tolerance: a
-killed decomposition resumes from the last completed sweep bit-exactly).
+        import repro.api as api
+        cfg    = api.DecomposeConfig(rank=32)
+        solver = api.compile(api.plan(tensor, cfg), cfg)
+        result = solver.run(iters=10)
+
+    which separates preprocessing (reusable, cacheable, serializable) from
+    execution instead of repartitioning the tensor on every invocation.
+
+:class:`CPResult` remains the canonical host-side result container for both
+paths.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import warnings
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import als as als_mod
-from repro.core import mttkrp as dmttkrp
 from repro.core.coo import SparseTensor
-from repro.core.partition import CPPlan, Strategy, build_plan
-from repro.kernels import ops as kops
+from repro.core.partition import CPPlan, Strategy
 
 __all__ = ["CPResult", "cp_decompose"]
 
@@ -35,13 +39,12 @@ class CPResult:
     sweeps: int
 
     def reconstruct_at(self, indices: np.ndarray) -> np.ndarray:
-        """Model values at the given coordinates (nnz, N) — for evaluation."""
-        out = np.asarray(self.lam, np.float64).copy()[None, :]
-        vals = np.ones((indices.shape[0], len(self.factors)), np.float64)
-        acc = np.repeat(out, indices.shape[0], axis=0)
+        """Model values at the given coordinates (nnz, N) — for evaluation:
+        ``x̂[i] = Σ_r λ_r · Π_w F_w[indices[i, w], r]``."""
+        acc = np.ones((indices.shape[0], self.lam.shape[0]), np.float64)
         for w, f in enumerate(self.factors):
-            acc = acc * f[indices[:, w]]
-        return acc.sum(axis=1)
+            acc *= np.asarray(f, np.float64)[indices[:, w]]
+        return acc @ np.asarray(self.lam, np.float64)
 
 
 def cp_decompose(
@@ -64,93 +67,30 @@ def cp_decompose(
     resume: bool = False,
     verbose: bool = False,
 ) -> CPResult:
-    """Run CP-ALS. ``use_kernel=True`` selects the Pallas EC kernel
-    (interpret mode off-TPU); ``kernel_variant`` picks among
-    ``"ref" | "blocked" | "fused"`` (None = env/default, see
-    repro.kernels.ops), ``num_buffers`` is the fused kernel's DMA ring depth
-    (None = 2, or the autotuned winner), and ``autotune=True`` sweeps
-    (tile, block_p, num_buffers) on a representative shard before
-    partitioning (cached per problem signature — see repro.kernels.autotune;
-    an explicitly passed ``num_buffers`` is honored over the tuned one).
-    ``ring=True`` uses the paper's Algorithm-3 ring exchange, else XLA's
-    native all-gather."""
+    """Deprecated one-shot CP-ALS (see module docstring for the replacement).
+
+    Maps its kwargs onto a :class:`repro.api.DecomposeConfig` and runs the
+    plan/compile/execute pipeline; results are identical to the staged API
+    with the same seed. Kwarg semantics are unchanged from the historical
+    monolith (``kernel_variant`` precedence, autotune, Algorithm-3 ring,
+    checkpoint/resume with elastic re-pad).
+    """
+    warnings.warn(
+        "cp_decompose() is deprecated; use repro.api "
+        "(plan/compile/execute) instead", DeprecationWarning, stacklevel=2)
+    from repro import api
+
     if num_devices is None:
         num_devices = len(jax.devices()) if mesh is None else mesh.devices.size
 
-    resolved_variant = kops.resolve_variant(kernel_variant, use_kernel)
-    tile = block_p = None
-    if autotune and resolved_variant != "ref":  # ref ignores all 3 params
-        from repro.kernels.autotune import autotune_ec
-        cfg = autotune_ec(tensor.nmodes, rank, variant=resolved_variant)
-        tile, block_p = cfg.tile, cfg.block_p
-        if num_buffers is None:
-            num_buffers = cfg.num_buffers
-    if num_buffers is None:
-        num_buffers = 2
+    cfg = api.DecomposeConfig.from_legacy_kwargs(
+        rank=rank, num_devices=num_devices, strategy=strategy,
+        replication=replication, tol=tol, seed=seed, use_kernel=use_kernel,
+        kernel_variant=kernel_variant, num_buffers=num_buffers,
+        autotune=autotune, ring=ring, checkpoint_dir=checkpoint_dir)
 
-    plan_kw = dict(strategy=strategy, replication=replication)
-    if tile is not None:
-        plan_kw.update(tile=tile, block_p=block_p)
-    plan = build_plan(tensor, num_devices, **plan_kw)
-    r = plan.modes[0].r
-    if mesh is None:
-        mesh = dmttkrp.cp_mesh(num_devices, r)
-    dev_arrays = [dmttkrp.shard_plan_mode(p, mesh) for p in plan.modes]
-
-    factors = als_mod.init_factors(plan, rank, seed=seed)
-    grams = [f.T @ f for f in factors]
-    state = als_mod.ALSState(factors=factors, lam=jnp.ones(rank), grams=grams)
-
-    start_sweep = 0
-    if checkpoint_dir is not None:
-        from repro.training.checkpoint import CheckpointManager
-        mgr = CheckpointManager(checkpoint_dir)
-        if resume:
-            restored = mgr.restore_latest()
-            if restored is not None:
-                # checkpoints hold GLOBAL-layout factors → elastic restore:
-                # re-pad into THIS plan's ownership layout, whatever the
-                # device count now is.
-                payload, step = restored
-                factors = []
-                for w, fg in enumerate(payload["factors"]):
-                    fp = np.zeros((plan.modes[w].padded_rows, rank),
-                                  np.float32)
-                    fp[plan.global_to_padded[w]] = fg
-                    factors.append(jnp.asarray(fp))
-                grams = [f.T @ f for f in factors]
-                state = als_mod.ALSState(
-                    factors=factors,
-                    lam=jnp.asarray(payload["lam"]),
-                    grams=grams,
-                    sweep=step, fits=list(payload.get("fits", [])))
-                start_sweep = step
-
-    updates = [als_mod.make_mode_update(plan, d, mesh, use_kernel=use_kernel,
-                                        variant=resolved_variant,
-                                        num_buffers=num_buffers, ring=ring)
-               for d in range(plan.nmodes)]
-
-    for it in range(start_sweep, iters):
-        state = als_mod.als_sweep(plan, mesh, dev_arrays, state, updates)
-        # state.fits holds device scalars; each read below blocks the host.
-        # With tol=0, no checkpointing and no verbose, sweeps run sync-free.
-        if verbose:
-            print(f"sweep {state.sweep}: fit={float(state.fits[-1]):.6f}")
-        if checkpoint_dir is not None:
-            mgr.save(state.sweep, {
-                "factors": als_mod.unpad_factors(plan, state.factors),
-                "lam": np.asarray(state.lam),
-                "fits": np.asarray([float(f) for f in state.fits], np.float64),
-            })
-        if tol > 0 and len(state.fits) >= 2 and \
-                abs(float(state.fits[-1]) - float(state.fits[-2])) < tol:
-            break
-
-    return CPResult(
-        factors=als_mod.unpad_factors(plan, state.factors),
-        lam=np.asarray(state.lam),
-        fits=[float(f) for f in state.fits],
-        plan=plan,
-        sweeps=state.sweep,
-    )
+    plan = api.plan(tensor, cfg)
+    solver = api.compile(plan, cfg, mesh=mesh)
+    if resume and checkpoint_dir is not None:
+        solver.restore()
+    return solver.run(iters, verbose=verbose)

@@ -90,7 +90,16 @@ class ModePartition:
     static and equal across devices (padding entries have ``values == 0`` and
     ``local_rows`` pointing at a row the device already owns, so they are
     exact no-ops).
+
+    ``ARRAY_FIELDS`` / ``META_FIELDS`` are the serialization contract used by
+    :mod:`repro.api.planning` (``save_plan``/``load_plan``): arrays round-trip
+    bit-exactly through npz, meta through the JSON manifest.
     """
+
+    ARRAY_FIELDS = ("indices", "values", "local_rows", "block_to_tile",
+                    "tile_visited", "nnz_true", "rows_owned")
+    META_FIELDS = ("mode", "num_devices", "r", "n_groups", "rows_max",
+                   "tile", "block_p")
 
     mode: int
     num_devices: int
@@ -222,17 +231,20 @@ def partition_mode(
     *,
     strategy: Strategy = "amped_cdf",
     replication: int | None = None,
-    tile: int = DEFAULT_TILE,
-    block_p: int = DEFAULT_BLOCK_P,
+    tile: int | None = None,
+    block_p: int | None = None,
     all_g2p: Sequence[np.ndarray] | None = None,
 ) -> tuple[ModePartition, np.ndarray, np.ndarray]:
     """Partition one per-mode tensor copy.
 
     Returns (ModePartition, global_to_padded, padded_to_global) for ``mode``.
+    ``tile``/``block_p`` default (None) to DEFAULT_TILE/DEFAULT_BLOCK_P.
     ``all_g2p``: translations for the *other* modes (already computed); if
     None, input-mode indices are left untranslated (identity) — callers
     normally go through :func:`build_plan`, which wires all modes.
     """
+    tile = DEFAULT_TILE if tile is None else tile
+    block_p = DEFAULT_BLOCK_P if block_p is None else block_p
     m = num_devices
     hist = t.mode_histogram(mode)
     if strategy == "equal_nnz":
@@ -374,8 +386,8 @@ def build_plan(
     *,
     strategy: Strategy = "amped_cdf",
     replication: int | None = None,
-    tile: int = DEFAULT_TILE,
-    block_p: int = DEFAULT_BLOCK_P,
+    tile: int | None = None,
+    block_p: int | None = None,
 ) -> CPPlan:
     """Full preprocessing (paper §3 + §5.7): every mode's copy, partitioned,
     row-relabelled, kernel-blocked and padded. Pure host/numpy.

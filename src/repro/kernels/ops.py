@@ -27,10 +27,12 @@ from repro.kernels.mttkrp_fused import ec_fused
 from repro.kernels.mttkrp_pallas import ec_blocked
 
 __all__ = ["mttkrp_local", "default_interpret", "resolve_variant",
-           "KERNEL_VARIANTS", "ENV_VARIANT", "DEFAULT_VARIANT"]
+           "kernel_kwargs_from_config", "KERNEL_VARIANTS", "ENV_VARIANT",
+           "DEFAULT_VARIANT", "DEFAULT_NUM_BUFFERS"]
 
 ENV_VARIANT = "AMPED_EC_VARIANT"
 DEFAULT_VARIANT = "blocked"
+DEFAULT_NUM_BUFFERS = 2
 
 
 def default_interpret() -> bool:
@@ -48,6 +50,31 @@ def resolve_variant(variant: str | None = None, use_kernel: bool = True) -> str:
             f"unknown EC variant {variant!r}; expected one of "
             f"{sorted(KERNEL_VARIANTS)}")
     return variant
+
+
+def kernel_kwargs_from_config(cfg, *, nmodes: int | None = None,
+                              rank: int | None = None) -> dict:
+    """Resolve a :class:`repro.api.KernelConfig`-shaped object (duck-typed:
+    ``use_kernel``, ``variant``, ``num_buffers``, ``autotune`` attributes)
+    into the kwargs ``make_mttkrp_fn`` / ``mttkrp_local`` take. This is the
+    single point where config-level kernel selection becomes concrete —
+    including the DMA ring depth: explicit ``num_buffers`` > autotuned
+    winner (when ``cfg.autotune`` and the problem key ``(nmodes, rank)`` is
+    given; memoized, so repeated resolution is free) > DEFAULT_NUM_BUFFERS."""
+    variant = resolve_variant(getattr(cfg, "variant", None),
+                              getattr(cfg, "use_kernel", True))
+    num_buffers = getattr(cfg, "num_buffers", None)
+    if num_buffers is None and getattr(cfg, "autotune", False) and \
+            variant != "ref" and nmodes is not None and rank is not None:
+        from repro.kernels import autotune
+        num_buffers = autotune.autotune_ec(nmodes, rank,
+                                           variant=variant).num_buffers
+    return dict(
+        use_kernel=variant != "ref",
+        variant=variant,
+        num_buffers=DEFAULT_NUM_BUFFERS if num_buffers is None
+        else int(num_buffers),
+    )
 
 
 def _mask_unvisited(out: jax.Array, tile_mask: jax.Array | None,

@@ -1,60 +1,74 @@
 """CP decomposition launcher (the paper's workload driver).
 
-    PYTHONPATH=src python -m repro.launch.decompose --profile amazon \
-        --scale 2e-4 --paper          # paper-faithful configuration
-    PYTHONPATH=src python -m repro.launch.decompose --profile twitch \
-        --scale 2e-4 --optimized      # beyond-paper (auto-r + blocked kernel)
-    PYTHONPATH=src python -m repro.launch.decompose --profile twitch \
-        --scale 2e-4 --fused          # fused in-kernel gather + autotune
+    PYTHONPATH=src python -m repro.launch.decompose --preset paper \
+        --profile amazon --scale 2e-4            # paper-faithful (§5.1)
+    PYTHONPATH=src python -m repro.launch.decompose --preset optimized \
+        --profile twitch --scale 2e-4            # auto-r + blocked kernel
+    PYTHONPATH=src python -m repro.launch.decompose --preset fused \
+        --set kernel.num_buffers=3 --set runtime.tol=0   # dotted overrides
+
+Runs the staged repro.api pipeline and reports preprocessing (plan) time
+separately from execution time, the way the paper does — pass --plan-cache
+to pay preprocessing once across invocations.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="paper",
+                    choices=["paper", "optimized", "fused"],
+                    help="named repro.api configuration preset")
+    ap.add_argument("--set", dest="set_args", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="dotted config override, e.g. kernel.variant=fused "
+                         "or runtime.tol=0 (repeatable)")
     ap.add_argument("--profile", default="amazon")
     ap.add_argument("--scale", type=float, default=2e-4)
     ap.add_argument("--rank", type=int, default=32)
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--devices", type=int, default=None)
-    mode = ap.add_mutually_exclusive_group()
-    mode.add_argument("--paper", action="store_true")
-    mode.add_argument("--optimized", action="store_true")
-    mode.add_argument("--fused", action="store_true")
-    ap.add_argument("--variant", default=None,
-                    help="override EC kernel variant (ref|blocked|fused)")
+    ap.add_argument("--plan-cache", default=None,
+                    help="plan cache directory (reuse preprocessing across "
+                         "runs with a matching content signature)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--no-resume", action="store_true",
+                    help="with --ckpt: start fresh instead of resuming")
     args = ap.parse_args()
 
-    from repro.configs.amped_paper import (fused_setup, optimized_setup,
-                                           paper_setup)
-    from repro.core.decompose import cp_decompose
+    import repro.api as api
     from repro.sparse.io import make_profile_tensor
 
-    make = (fused_setup if args.fused
-            else optimized_setup if args.optimized else paper_setup)
-    setup = make(args.profile)
+    cfg = api.preset(args.preset, {"rank": args.rank})
     if args.devices:
-        setup = dataclasses.replace(setup, num_devices=args.devices)
-    if args.variant:
-        setup = dataclasses.replace(setup, use_kernel=args.variant != "ref",
-                                    kernel_variant=args.variant)
+        cfg = cfg.with_overrides({"runtime.num_devices": args.devices})
+    if args.ckpt:
+        cfg = cfg.with_overrides({"runtime.checkpoint_dir": args.ckpt})
+    cfg = api.apply_set_args(cfg, args.set_args)
 
     t = make_profile_tensor(args.profile, scale=args.scale, seed=0)
     print(f"{args.profile} @ {args.scale}: shape={t.shape} nnz={t.nnz} "
-          f"devices={setup.num_devices} r={setup.replication} "
-          f"kernel={setup.use_kernel} variant={setup.kernel_variant}")
+          f"preset={args.preset} rank={cfg.rank} "
+          f"variant={cfg.kernel.resolved_variant()}")
+
     t0 = time.time()
-    res = cp_decompose(
-        t, **{**setup.decompose_kwargs(), "rank": args.rank},
-        iters=args.iters, checkpoint_dir=args.ckpt,
-        resume=args.ckpt is not None, verbose=True)
-    print(f"{res.sweeps} sweeps in {time.time()-t0:.1f}s; "
-          f"final fit {res.fits[-1]:.5f}")
+    plan = api.plan(t, cfg, cache_dir=args.plan_cache)
+    t_plan = time.time() - t0
+    solver = api.compile(plan, cfg)
+    t_compile = time.time() - t0 - t_plan
+    if args.ckpt and not args.no_resume:
+        solver.restore()
+    t1 = time.time()
+    res = solver.run(args.iters, verbose=True)
+    t_exec = time.time() - t1
+
+    hit = args.plan_cache is not None and api.CACHE_STATS["hits"] > 0
+    print(f"plan {t_plan:.1f}s{' (cache hit)' if hit else ''} | "
+          f"compile {t_compile:.1f}s | execute {t_exec:.1f}s")
+    print(f"{res.sweeps} sweeps; final fit {res.fits[-1]:.5f}")
 
 
 if __name__ == "__main__":

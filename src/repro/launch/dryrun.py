@@ -115,10 +115,22 @@ def _mem_dict(mem) -> dict:
 
 def run_cp_cell(*, multi_pod: bool, profile: str = "amazon",
                 replication: int = 1, use_kernel: bool = False,
-                ring: bool = True, save: bool = True) -> dict:
+                ring: bool = True, save: bool = True,
+                config=None) -> dict:
     """Dry-run of the paper's own workload: one distributed MTTKRP mode step
-    (EC + exchange) on the production chips at billion-scale shapes."""
+    (EC + exchange) on the production chips at billion-scale shapes.
+
+    ``config`` (a :class:`repro.api.DecomposeConfig`) supersedes the scalar
+    kwargs: replication/kernel/exchange settings are read off its sections
+    (``replication=None`` in the config means auto — the dry run needs a
+    concrete mesh factor, so it falls back to the ``replication`` kwarg).
+    """
     from types import SimpleNamespace
+
+    if config is not None:
+        if config.partition.replication is not None:
+            replication = config.partition.replication
+        ring = config.exchange.ring
 
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -133,6 +145,11 @@ def run_cp_cell(*, multi_pod: bool, profile: str = "amazon",
     mesh = make_cp_production_mesh(multi_pod=multi_pod, replication=r)
     rank = 32
     n = len(prof.shape)
+    # resolve the kernel exactly as api.compile would for this problem
+    # (including the autotuned num_buffers when the config asks for it)
+    kernel_kw = ({"use_kernel": use_kernel} if config is None else
+                 config.kernel.mttkrp_kwargs(nmodes=n, rank=rank))
+    use_kernel = kernel_kw.get("use_kernel", use_kernel)
     mode = 0
     tile, block_p = 8, 128
     # balanced-partition shapes: nnz evenly split (CDF split ⇒ ±1 index)
@@ -156,7 +173,7 @@ def run_cp_cell(*, multi_pod: bool, profile: str = "amazon",
         tile_visited=st((g, r, rows_max // tile), jnp.float32),
     )
     factors = [st((padded[w], rank), jnp.float32) for w in range(n)]
-    fn = dm.make_mttkrp_fn(part, mesh, use_kernel=use_kernel, ring=ring)
+    fn = dm.make_mttkrp_fn(part, mesh, ring=ring, **kernel_kw)
 
     sh = lambda *spec: NamedSharding(mesh, P(*spec))
     dev_in = dm.DeviceArrays(
@@ -216,6 +233,9 @@ def main():
     ap.add_argument("--cp-profile", default="amazon")
     ap.add_argument("--cp-replication", type=int, default=1)
     ap.add_argument("--cp-kernel", action="store_true")
+    ap.add_argument("--cp-preset", default=None,
+                    help="repro.api preset (paper|optimized|fused) driving "
+                         "the CP cell's kernel/exchange/replication settings")
     ap.add_argument("--kv-layout", default="auto")
     ap.add_argument("--moe-dispatch", default=None)
     ap.add_argument("--tag-extra", default="")
@@ -223,10 +243,14 @@ def main():
 
     meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
     if args.arch == "cp":
+        cfg = None
+        if args.cp_preset:
+            from repro.api import preset
+            cfg = preset(args.cp_preset)
         for mp in meshes:
             rec = run_cp_cell(multi_pod=mp, profile=args.cp_profile,
                               replication=args.cp_replication,
-                              use_kernel=args.cp_kernel)
+                              use_kernel=args.cp_kernel, config=cfg)
             _report(rec)
         return
 

@@ -1,0 +1,71 @@
+"""Elastic restore through the plan/compile/execute API: checkpoint a solver
+compiled for 4 devices, restore into one compiled for 2 devices, and keep
+sweeping — exercises the global→padded re-pad path. Runs in a subprocess with
+4 virtual CPU devices (the main test env stays at 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import json, tempfile
+import numpy as np, jax
+import repro.api as api
+from repro.core.coo import random_sparse
+
+assert jax.device_count() == 4, jax.device_count()
+results = {}
+
+t = random_sparse((50, 37, 24), 800, seed=1, distribution="zipf")
+ck = tempfile.mkdtemp()
+plans = tempfile.mkdtemp()
+
+base = {"rank": 6, "runtime.tol": 0.0, "runtime.seed": 5,
+        "runtime.checkpoint_dir": ck}
+cfg4 = api.preset("paper", {**base, "runtime.num_devices": 4})
+cfg2 = api.preset("paper", {**base, "runtime.num_devices": 2})
+
+# 4-device session: 3 sweeps, checkpointing every sweep
+solver4 = api.compile(api.plan(t, cfg4, cache_dir=plans), cfg4)
+r4 = solver4.run(3)
+results["fits4"] = r4.fits
+
+# 2-device session: fresh plan (different ownership layout), elastic restore
+solver2 = api.compile(api.plan(t, cfg2, cache_dir=plans), cfg2)
+results["restored"] = bool(solver2.restore())
+results["resumed_sweep"] = solver2.state.sweep
+r2 = solver2.run(6)
+results["fits2"] = r2.fits
+
+# the two plans have distinct signatures -> both were built (no false hit)
+results["cache"] = dict(api.CACHE_STATS)
+
+# fits continue within tolerance across the device-count change
+results["continues"] = bool(len(r2.fits) == 6 and
+                            r2.fits[3] >= r4.fits[-1] - 1e-3)
+results["monotone_tail"] = bool(all(
+    b >= a - 1e-4 for a, b in zip(r2.fits[3:], r2.fits[4:])))
+print("RESULTS_JSON:" + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_elastic_restore_4_to_2_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = next(l for l in proc.stdout.splitlines()
+                if l.startswith("RESULTS_JSON:"))
+    res = json.loads(line[len("RESULTS_JSON:"):])
+    assert res["restored"], res
+    assert res["resumed_sweep"] == 3, res
+    # first three fits match the 4-device run exactly (restored state)
+    assert res["fits2"][:3] == pytest.approx(res["fits4"], abs=1e-6), res
+    assert res["continues"], res
+    assert res["monotone_tail"], res
+    assert res["cache"] == {"hits": 0, "misses": 2}, res
