@@ -16,12 +16,19 @@ same partitioned shard; the report carries, per variant:
   * an HLO check: ``gather_free`` is True iff the lowered computation
     contains no XLA gather op (no materialized intermediate exists).
 
+A second scenario exercises the *scheduler*: on a synthetic hot-index
+(skewed) tensor with 4 forced host devices, CP-ALS runs with the dynamic
+rebalancer off vs on, and the report carries the per-sweep max/mean
+per-device EC-time ratio plus the idle fraction (1 - 1/ratio) of the
+parallel makespan — the quantity AMPED's dynamic load balancing minimizes.
+
 Output: ``experiments/bench/BENCH_mttkrp.json`` (benchmarks/common.py's
-standard location). On this CPU-only container the Pallas variants run in
-interpret mode, so *absolute* times are meaningless for the kernel paths —
-the modelled-traffic numbers and the gather-free property are the
-machine-readable perf trajectory; on TPU the same script reports real
-GFLOP/s.
+standard location) plus a copy at the repo root (``BENCH_mttkrp.json``) so
+the perf trajectory is tracked across PRs. On this CPU-only container the
+Pallas variants run in interpret mode, so *absolute* times are meaningless
+for the kernel paths — the modelled-traffic numbers, the gather-free
+property and the rebalance ratios are the machine-readable perf trajectory;
+on TPU the same script reports real GFLOP/s.
 """
 from __future__ import annotations
 
@@ -31,9 +38,70 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import save_result, timeit
+from benchmarks.common import run_subprocess_bench, save_result, timeit
 
 VARIANTS = ("ref", "blocked", "fused")
+
+SKEW_SCRIPT = r"""
+import json
+import numpy as np
+import jax
+assert jax.device_count() == 4, jax.device_count()
+
+import repro.api as api
+from repro.core.coo import SparseTensor
+
+NNZ = {nnz}
+rng = np.random.default_rng(0)
+hot = NNZ * 6 // 10
+i0 = np.concatenate([rng.integers(0, 3, hot),
+                     rng.integers(3, 4096, NNZ - hot)])
+t = SparseTensor(
+    np.stack([i0, rng.integers(0, 64, NNZ), rng.integers(0, 64, NNZ)], 1
+             ).astype(np.int32),
+    rng.standard_normal(NNZ).astype(np.float32), (4096, 64, 64)
+).deduplicated()
+
+base = api.paper({{"rank": 8, "runtime.tol": 0.0,
+                   "partition.strategy": "equal_nnz"}})
+out = {{"nnz": t.nnz, "devices": 4}}
+for label, rebalance in (("off", "measure"), ("on", "on")):
+    cfg = base.with_overrides({{
+        "schedule.rebalance": rebalance, "schedule.cadence": 1,
+        "schedule.imbalance_threshold": 1.1,
+        "schedule.migration_budget": 0.4}})
+    solver = api.compile(api.plan(t, cfg), cfg)
+    res = solver.run({sweeps})
+    worst = [max(e["imbalance"].values()) for e in solver.schedule_events]
+    out[label] = {{
+        "fit": float(res.fits[-1]),
+        "imbalance_per_point": worst,
+        "idle_frac_per_point": [1.0 - 1.0 / w for w in worst],
+        "moved_nnz": int(sum(e["moved_nnz"]
+                             for e in solver.schedule_events)),
+        "rebalance_epoch": int(solver.plan.rebalance_epoch),
+    }}
+print("RESULT_JSON:" + json.dumps(out))
+"""
+
+
+def bench_skew_rebalance(*, nnz: int = 40000, sweeps: int = 6) -> dict:
+    """Rebalancer A/B on a hot-index tensor, 4 forced host devices (its own
+    subprocess — the main process must keep a single device)."""
+    result = run_subprocess_bench(
+        SKEW_SCRIPT.format(nnz=nnz, sweeps=sweeps), devices=4)
+    off, on = result["off"], result["on"]
+    result["final_imbalance_off"] = off["imbalance_per_point"][-1]
+    result["final_imbalance_on"] = on["imbalance_per_point"][-1]
+    result["idle_frac_reduction"] = (off["idle_frac_per_point"][-1]
+                                     - on["idle_frac_per_point"][-1])
+    # Recorded, not asserted: a noisy wall-clock run must not lose the whole
+    # benchmark artifact. CI gates on these fields; the deterministic
+    # assertion lives in tests/test_schedule_multidevice.py.
+    result["imbalance_reduced"] = (result["final_imbalance_on"]
+                                   < result["final_imbalance_off"])
+    result["fit_delta"] = abs(off["fit"] - on["fit"])
+    return result
 
 
 def _flops(nnz: int, rank: int, nin: int) -> int:
@@ -123,6 +191,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--skip-skew", action="store_true",
+                    help="skip the 4-device rebalancer scenario")
     args = ap.parse_args()
 
     if args.quick:
@@ -144,14 +214,26 @@ def main() -> None:
               f"(model {b['modelled_hbm_bytes']/1e6:.2f}MB)")
         points.append(pt)
 
+    skew = None
+    if not args.skip_skew:
+        skew = bench_skew_rebalance(
+            nnz=12000 if args.quick else 40000,
+            sweeps=4 if args.quick else 6)
+        print(f"skew rebalance (4 dev, nnz={skew['nnz']}): max/mean "
+              f"{skew['final_imbalance_off']:.3f} -> "
+              f"{skew['final_imbalance_on']:.3f}, idle frac reduced by "
+              f"{skew['idle_frac_reduction']:.3f}, "
+              f"{skew['on']['moved_nnz']} nnz moved")
+
     save_result("BENCH_mttkrp", {
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "notes": ("interpret-mode times are not hardware-meaningful; "
-                  "modelled_hbm_bytes + gather_free carry the perf claim "
-                  "off-TPU"),
+                  "modelled_hbm_bytes + gather_free + the skew_rebalance "
+                  "ratios carry the perf claim off-TPU"),
         "points": points,
-    })
+        "skew_rebalance": skew,
+    }, also_root=True)
 
 
 if __name__ == "__main__":

@@ -55,10 +55,17 @@ def run_subprocess_bench(script: str, *, devices: int = 8,
     return json.loads(line[len("RESULT_JSON:"):])
 
 
-def save_result(name: str, payload: dict) -> None:
+def save_result(name: str, payload: dict, *, also_root: bool = False) -> None:
+    """Write ``experiments/bench/<name>.json``; with ``also_root`` a copy
+    also lands at the repo root (``<name>.json``) so the perf trajectory is
+    diffable across PRs without digging into experiments/."""
     os.makedirs(OUT_DIR, exist_ok=True)
-    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
-        json.dump(payload, f, indent=1, default=str)
+    paths = [os.path.join(OUT_DIR, f"{name}.json")]
+    if also_root:
+        paths.append(os.path.join(HERE, "..", f"{name}.json"))
+    for p in paths:
+        with open(p, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
 
 
 def print_csv(name: str, rows: list[dict]) -> None:

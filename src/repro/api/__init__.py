@@ -18,7 +18,8 @@ deprecated shim over exactly this pipeline.
 """
 from repro.api.config import (DecomposeConfig, ExchangeConfig, KernelConfig,
                               PartitionConfig, PRESETS, RuntimeConfig,
-                              apply_set_args, fused, optimized, paper, preset)
+                              ScheduleConfig, apply_set_args, fused,
+                              optimized, paper, preset)
 from repro.api.planning import (CACHE_STATS, PlanSignatureError, load_plan,
                                 plan, plan_signature, reset_cache_stats,
                                 save_plan)
@@ -26,9 +27,9 @@ from repro.api.solver import CPSolver, compile
 
 __all__ = [
     # config layer
-    "DecomposeConfig", "PartitionConfig", "KernelConfig", "ExchangeConfig",
-    "RuntimeConfig", "paper", "optimized", "fused", "preset", "PRESETS",
-    "apply_set_args",
+    "DecomposeConfig", "PartitionConfig", "ScheduleConfig", "KernelConfig",
+    "ExchangeConfig", "RuntimeConfig", "paper", "optimized", "fused",
+    "preset", "PRESETS", "apply_set_args",
     # plan layer
     "plan", "plan_signature", "save_plan", "load_plan", "PlanSignatureError",
     "CACHE_STATS", "reset_cache_stats",

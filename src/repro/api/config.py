@@ -1,10 +1,14 @@
 """Typed configuration for the plan/compile/execute API.
 
-A :class:`DecomposeConfig` is a frozen composition of four orthogonal
+A :class:`DecomposeConfig` is a frozen composition of five orthogonal
 sub-configs, mirroring the stages of the AMPED pipeline:
 
   * :class:`PartitionConfig` — what the preprocessing (``api.plan``) does:
     sharding strategy, intra-group replication, kernel blocking geometry.
+  * :class:`ScheduleConfig`  — the scheduling subsystem
+    (:mod:`repro.schedule`): which static policy assigns groups, and whether
+    / how the dynamic rebalancer measures per-device EC time across sweeps
+    and migrates nonzeros between group members.
   * :class:`KernelConfig`    — which EC implementation executes the MTTKRP
     hot loop and its launch parameters (variant, DMA ring depth, autotune).
   * :class:`ExchangeConfig`  — how partial factors move between devices
@@ -31,6 +35,7 @@ from repro.core.partition import Strategy
 
 __all__ = [
     "PartitionConfig",
+    "ScheduleConfig",
     "KernelConfig",
     "ExchangeConfig",
     "RuntimeConfig",
@@ -52,6 +57,61 @@ class PartitionConfig:
     replication: int | None = 1     # None = auto per-mode pick (beyond-paper)
     tile: int | None = None         # None = partitioner default (or autotune)
     block_p: int | None = None      # None = partitioner default (or autotune)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    """Scheduling subsystem knobs (see :mod:`repro.schedule`).
+
+    ``policy`` overrides the static group-assignment policy; ``None`` uses
+    ``partition.strategy`` (they name the same registry —
+    ``repro.schedule.static.POLICIES``). ``rebalance`` selects the dynamic
+    load balancer's mode:
+
+      * ``"off"``      — no telemetry, no migrations (the static paper path).
+      * ``"measure"``  — collect per-mode per-device EC-time telemetry at
+        rebalance points and calibrate the cost model, but never migrate
+        (for imbalance reports and A/B baselines; factors stay bitwise
+        identical to ``"off"``).
+      * ``"on"``       — measure and migrate nonzeros between replication
+        group members when a mode's EWMA max/mean imbalance exceeds
+        ``imbalance_threshold``.
+    """
+
+    policy: str | None = None        # None = partition.strategy
+    rebalance: str = "off"           # "off" | "measure" | "on"
+    cadence: int = 2                 # sweeps between rebalance points
+    imbalance_threshold: float = 1.2  # EWMA max/mean ratio that triggers
+    migration_budget: float = 0.25   # max fraction of a group's nnz moved
+                                     # per rebalance event (0 disables)
+    ewma_alpha: float = 0.5          # telemetry/cost-model smoothing
+    probe_repeats: int = 1           # timed EC runs per device per probe
+
+    def __post_init__(self):
+        if self.rebalance not in ("off", "measure", "on"):
+            raise ValueError(
+                f"schedule.rebalance must be 'off' | 'measure' | 'on', "
+                f"got {self.rebalance!r}")
+        if self.cadence < 1:
+            raise ValueError("schedule.cadence must be >= 1")
+        if self.imbalance_threshold < 1.0:
+            raise ValueError("schedule.imbalance_threshold is a max/mean "
+                             "ratio; it must be >= 1.0")
+        if not 0.0 <= self.migration_budget <= 1.0:
+            raise ValueError("schedule.migration_budget is a fraction of a "
+                             "group's nnz; it must be in [0, 1]")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError("schedule.ewma_alpha must be in (0, 1]")
+        if self.probe_repeats < 1:
+            raise ValueError("schedule.probe_repeats must be >= 1")
+
+    @property
+    def telemetry_enabled(self) -> bool:
+        return self.rebalance in ("measure", "on")
+
+    @property
+    def migrations_enabled(self) -> bool:
+        return self.rebalance == "on" and self.migration_budget > 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,10 +162,17 @@ class DecomposeConfig:
     rank: int = 32
     partition: PartitionConfig = dataclasses.field(
         default_factory=PartitionConfig)
+    schedule: ScheduleConfig = dataclasses.field(
+        default_factory=ScheduleConfig)
     kernel: KernelConfig = dataclasses.field(default_factory=KernelConfig)
     exchange: ExchangeConfig = dataclasses.field(
         default_factory=ExchangeConfig)
     runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
+
+    def resolved_policy(self) -> str:
+        """The static group-assignment policy ``api.plan`` will use:
+        ``schedule.policy`` if set, else ``partition.strategy``."""
+        return self.schedule.policy or self.partition.strategy
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
@@ -119,6 +186,7 @@ class DecomposeConfig:
         return cls(
             rank=int(d.get("rank", 32)),
             partition=PartitionConfig(**d.get("partition", {})),
+            schedule=ScheduleConfig(**d.get("schedule", {})),
             kernel=KernelConfig(**d.get("kernel", {})),
             exchange=ExchangeConfig(**d.get("exchange", {})),
             runtime=RuntimeConfig(**d.get("runtime", {})),
@@ -181,7 +249,7 @@ class DecomposeConfig:
         return cfg
 
 
-_SECTIONS = ("partition", "kernel", "exchange", "runtime")
+_SECTIONS = ("partition", "schedule", "kernel", "exchange", "runtime")
 
 
 def _replace_checked(obj, field: str, value):

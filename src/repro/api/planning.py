@@ -34,7 +34,7 @@ from repro.core.partition import CPPlan, ModePartition
 __all__ = ["plan", "plan_signature", "save_plan", "load_plan",
            "PlanSignatureError", "CACHE_STATS", "reset_cache_stats"]
 
-PLAN_FORMAT_VERSION = 1
+PLAN_FORMAT_VERSION = 2  # v2: ModePartition.blocks_true + rebalance_epoch
 _SAMPLE_CAP = 65536  # strided digest sample size (cheap at billion scale)
 
 # Observability for tests and ops dashboards: how often plan() rebuilt vs
@@ -92,19 +92,25 @@ def _resolve_num_devices(config: DecomposeConfig,
 
 
 def plan_signature(tensor: SparseTensor, config: DecomposeConfig, *,
-                   num_devices: int | None = None) -> str:
+                   num_devices: int | None = None,
+                   rebalance_epoch: int = 0) -> str:
     """Content signature keying the plan cache: tensor identity + every
-    config field that changes the partition output."""
+    config field that changes the partition output. The strategy is the
+    *resolved* scheduling policy (``schedule.policy`` overrides
+    ``partition.strategy``). ``rebalance_epoch`` extends the signature for
+    plans evolved by the dynamic rebalancer — epoch k+1 never aliases the
+    epoch-k plan it migrated from."""
     nd = _resolve_num_devices(config, num_devices)
     tile, block_p = _resolve_geometry(tensor.nmodes, config)
     payload = {
         "format": PLAN_FORMAT_VERSION,
         "tensor": _tensor_digest(tensor),
         "num_devices": nd,
-        "strategy": config.partition.strategy,
+        "strategy": config.resolved_policy(),
         "replication": config.partition.replication,
         "tile": tile,
         "block_p": block_p,
+        "rebalance_epoch": int(rebalance_epoch),
     }
     return hashlib.sha256(
         json.dumps(payload, sort_keys=True).encode()).hexdigest()
@@ -124,6 +130,7 @@ def save_plan(p: CPPlan, path: str, *, signature: str | None = None) -> str:
         "shape": [int(s) for s in p.shape],
         "num_devices": int(p.num_devices),
         "norm": float(p.norm),
+        "rebalance_epoch": int(p.rebalance_epoch),
         "modes": [],
     }
     for d, part in enumerate(p.modes):
@@ -177,6 +184,7 @@ def load_plan(path: str, *, expect_signature: str | None = None) -> CPPlan:
         global_to_padded=tuple(g2ps),
         padded_to_global=tuple(p2gs),
         norm=float(manifest["norm"]),
+        rebalance_epoch=int(manifest.get("rebalance_epoch", 0)),
     )
 
 
@@ -207,7 +215,7 @@ def plan(tensor: SparseTensor, config: DecomposeConfig, *,
 
     CACHE_STATS["misses"] += 1
     p = partition_mod.build_plan(
-        tensor, nd, strategy=config.partition.strategy,
+        tensor, nd, strategy=config.resolved_policy(),
         replication=config.partition.replication, tile=tile, block_p=block_p)
     if cache_dir is not None:
         try:

@@ -1,14 +1,25 @@
 """Execute layer: ``compile(plan, config) -> CPSolver``.
 
 A :class:`CPSolver` is the session object that owns everything expensive:
-the device mesh, the sharded per-mode tensor copies, and the jitted per-mode
-ALS updates (with donated factor buffers). Building one pays the device
-placement and trace/compile cost once; after that, sweeps are pure enqueued
-device work:
+the device mesh, the sharded per-mode tensor copies (held through a
+:class:`~repro.sparse.stream.ShardStreamer`, which also absorbs rebalanced
+shards asynchronously), and the jitted per-mode ALS updates (with donated
+factor buffers). Building one pays the device placement and trace/compile
+cost once; after that, sweeps are pure enqueued device work:
 
     solver = api.compile(plan, cfg)
     solver.restore()            # optional: elastic resume from checkpoints
     result = solver.run(iters)  # CPResult — or step with solver.sweep()
+
+When ``config.schedule.rebalance`` is ``"measure"`` or ``"on"`` the solver
+also owns a :class:`~repro.schedule.rebalance.Rebalancer`: every
+``schedule.cadence`` sweeps it synchronizes, probes per-mode per-device EC
+wall time, recalibrates the cost model, and — in ``"on"`` mode — applies
+block-granular nnz migrations between replication-group members as an
+*incremental* plan update (array shapes are preserved, so the jitted
+updates are reused without recompiling; only migrated modes' shards are
+re-placed, prefetched in the background by the streamer). Sweeps between
+rebalance points remain fully asynchronous.
 
 The solver is deliberately *not* serializable — that's the plan's job
 (:mod:`repro.api.planning`) plus the checkpoint manager's
@@ -28,29 +39,49 @@ from repro.core import als as als_mod
 from repro.core import mttkrp as dmttkrp
 from repro.core.decompose import CPResult
 from repro.core.partition import CPPlan
+from repro.sparse.stream import ShardStreamer
 
 __all__ = ["CPSolver", "compile"]
 
 
 class CPSolver:
     """A compiled CP-ALS session: mesh + sharded tensor copies + jitted
-    updates + current :class:`~repro.core.als.ALSState`."""
+    updates + current :class:`~repro.core.als.ALSState` (+ optional
+    :class:`~repro.schedule.rebalance.Rebalancer`)."""
 
     def __init__(self, plan: CPPlan, config: DecomposeConfig, mesh: Mesh):
         self.plan = plan
         self.config = config
         self.mesh = mesh
-        self.dev_arrays = [dmttkrp.shard_plan_mode(p, mesh)
-                           for p in plan.modes]
+        # All modes stay resident (prefetch=nmodes): the streamer is here
+        # for its async (re)placement, not capacity eviction — billion-scale
+        # out-of-HBM streaming drops the prefetch depth.
+        self.streamer = ShardStreamer(plan, mesh, prefetch=plan.nmodes)
         kernel_kw = config.kernel.mttkrp_kwargs(nmodes=plan.nmodes,
                                                 rank=config.rank)
         self.updates = als_mod.make_sweep_updates(
             plan, mesh, ring=config.exchange.ring, **kernel_kw)
+        self.rebalancer = None
+        if config.schedule.telemetry_enabled:
+            from repro.schedule.rebalance import Rebalancer
+            self.rebalancer = Rebalancer(
+                imbalance_threshold=config.schedule.imbalance_threshold,
+                migration_budget=config.schedule.migration_budget,
+                ewma_alpha=config.schedule.ewma_alpha,
+                probe_repeats=config.schedule.probe_repeats,
+                kernel_kw=kernel_kw,
+                migrate=config.schedule.migrations_enabled)
+        self.schedule_events: list[dict] = []
         self._ckpt_mgr = None
         if config.runtime.checkpoint_dir is not None:
             from repro.training.checkpoint import CheckpointManager
             self._ckpt_mgr = CheckpointManager(config.runtime.checkpoint_dir)
         self.reset()
+
+    @property
+    def dev_arrays(self) -> list:
+        """Per-mode device shards (kept resident by the streamer)."""
+        return [self.streamer.get(d) for d in range(self.plan.nmodes)]
 
     # -- state lifecycle ---------------------------------------------------
     def reset(self) -> None:
@@ -109,25 +140,90 @@ class CPSolver:
                                        self.state, self.updates)
         return self.state
 
+    def rebalance_step(self):
+        """One rebalance point: sync, probe per-mode per-device EC times,
+        recalibrate the cost model, and (in ``rebalance="on"``) apply any
+        triggered migrations incrementally. Returns the
+        :class:`~repro.schedule.rebalance.ReplanDecision`, or None when the
+        scheduler is off."""
+        if self.rebalancer is None:
+            return None
+        from repro.schedule.rebalance import apply_rebalance
+        # Host copies decouple the probes from the solver's committed mesh
+        # sharding — this is the one deliberate sync point.
+        factors = [jnp.asarray(np.asarray(f)) for f in self.state.factors]
+        decision = self.rebalancer.observe(self.plan, factors,
+                                           sweep=self.state.sweep)
+        event = dict(self.rebalancer.events[-1])
+        if decision.triggered:
+            self.plan, applied = apply_rebalance(self.plan, decision)
+            # Re-place only modes where something actually moved — a
+            # skipped migration (no headroom) leaves bit-identical arrays,
+            # and re-uploading them every rebalance point would be pure
+            # H2D waste.
+            moved_modes = sorted({a["mode"] for a in applied
+                                  if a.get("moved_nnz", 0) > 0})
+            if moved_modes:
+                self.streamer.update_plan(self.plan, moved_modes)
+            else:
+                self.streamer.plan = self.plan  # epoch bump only
+            event["applied"] = applied
+            event["epoch_after"] = self.plan.rebalance_epoch
+        self.schedule_events.append(event)
+        return decision
+
     def run(self, iters: int, *, tol: float | None = None,
             verbose: bool = False) -> CPResult:
         """Sweep until ``iters`` total sweeps or the fit plateaus below
         ``tol`` (default: config.runtime.tol). Checkpoints every sweep when a
-        checkpoint_dir is configured. Resumes from the current state's sweep
-        counter, so ``restore(); run(iters)`` continues where the checkpoint
-        left off."""
+        checkpoint_dir is configured; hits a rebalance point every
+        ``config.schedule.cadence`` sweeps when the scheduler is enabled.
+        Resumes from the current state's sweep counter, so
+        ``restore(); run(iters)`` continues where the checkpoint left off."""
         if tol is None:
             tol = self.config.runtime.tol
+        cadence = self.config.schedule.cadence
         for _ in range(self.state.sweep, iters):
             state = self.sweep()
             if verbose:
                 print(f"sweep {state.sweep}: fit={float(state.fits[-1]):.6f}")
             if self._ckpt_mgr is not None:
                 self.checkpoint()
+            if self.rebalancer is not None and state.sweep % cadence == 0 \
+                    and state.sweep < iters:
+                self.rebalance_step()
             if tol > 0 and len(state.fits) >= 2 and \
                     abs(float(state.fits[-1]) - float(state.fits[-2])) < tol:
                 break
         return self.result()
+
+    def imbalance_report(self) -> dict:
+        """Measured-vs-modelled imbalance per mode plus the rebalance event
+        log — what ``launch.decompose`` prints. Empty when the scheduler
+        never ran."""
+        if self.rebalancer is None or not self.rebalancer.ewma_times:
+            return {"enabled": False, "events": []}
+        from repro.schedule.rebalance import imbalance_ratio
+        per_mode = {}
+        for mode, part in enumerate(self.plan.modes):
+            measured = self.rebalancer.ewma_times.get(mode)
+            per_mode[mode] = {
+                "measured_imbalance":
+                    imbalance_ratio(measured) if measured is not None else None,
+                "modelled_imbalance":
+                    imbalance_ratio(self.rebalancer.cost_model.predict(part)),
+                "r": int(part.r),
+            }
+        c = self.rebalancer.cost_model.coeffs
+        return {
+            "enabled": True,
+            "rebalance_epoch": int(self.plan.rebalance_epoch),
+            "coefficients": {"sec_per_nnz": c.sec_per_nnz,
+                             "sec_per_slot": c.sec_per_slot,
+                             "sec_fixed": c.sec_fixed},
+            "per_mode": per_mode,
+            "events": self.schedule_events,
+        }
 
     def result(self) -> CPResult:
         """Snapshot the current state as a host-side :class:`CPResult`

@@ -26,6 +26,13 @@ is gather → multiply → segment-reduce, and the post-mode exchange is exactly
 ``reduce_scatter(sub) ∘ all_gather(all)`` with no scatter/permutation on
 device. This is the FLYCOO-style "preprocessed per-mode copy" of the paper,
 minus dynamic remapping (which the paper also drops).
+
+This module is pure **layout construction**: the scheduling decisions — which
+group owns which index (strategy policies) and which replication factor to
+use — live in :mod:`repro.schedule.static` over the explicit cost model of
+:mod:`repro.schedule.cost`; the dynamic counterpart (telemetry-driven nnz
+migration between group members) is :mod:`repro.schedule.rebalance`, which
+reuses :func:`block_device_rows` for its incremental re-blocking.
 """
 from __future__ import annotations
 
@@ -36,12 +43,15 @@ from typing import Literal, Sequence
 import numpy as np
 
 from repro.core.coo import SparseTensor
+from repro.schedule import static as static_policies
+from repro.schedule.static import auto_replication  # noqa: F401  (re-export)
 
 __all__ = [
     "ModePartition",
     "CPPlan",
     "partition_mode",
     "build_plan",
+    "block_device_rows",
     "auto_replication",
     "Strategy",
 ]
@@ -59,29 +69,6 @@ def _lcm(a: int, b: int) -> int:
     return a * b // math.gcd(a, b)
 
 
-def auto_replication(hist: np.ndarray, num_devices: int) -> int:
-    """Pick the intra-group replication ``r`` for one mode.
-
-    Rules (all powers of two dividing ``num_devices``):
-      * groups must not outnumber rows that exist: ``m/r <= max(len(hist),1)``
-      * a single hot index caps achievable balance at ``c_max``; raise ``r``
-        until ``c_max/r`` is below the mean per-device load.
-    """
-    m = num_devices
-    nnz = int(hist.sum())
-    c_max = int(hist.max()) if hist.size else 0
-    r = 1
-    while r < m and m // r > max(int(hist.size), 1):
-        r *= 2
-    if nnz > 0:
-        mean_load = nnz / m
-        while r < m and c_max / r > 2.0 * mean_load:
-            r *= 2
-    while m % r:  # keep r a divisor of m
-        r //= 2
-    return max(1, r)
-
-
 @dataclasses.dataclass(frozen=True)
 class ModePartition:
     """Device-ready sharding of one per-mode tensor copy.
@@ -97,7 +84,7 @@ class ModePartition:
     """
 
     ARRAY_FIELDS = ("indices", "values", "local_rows", "block_to_tile",
-                    "tile_visited", "nnz_true", "rows_owned")
+                    "tile_visited", "nnz_true", "rows_owned", "blocks_true")
     META_FIELDS = ("mode", "num_devices", "r", "n_groups", "rows_max",
                    "tile", "block_p")
 
@@ -120,6 +107,11 @@ class ModePartition:
                                 # output tiles uninitialised; they are masked)
     nnz_true: np.ndarray        # (m,) true (unpadded) nnz per device
     rows_owned: np.ndarray      # (n_groups,) true rows owned per group
+    blocks_true: np.ndarray     # (m,) used (non-pad) kernel blocks per
+                                # device — with block_p this is the work the
+                                # kernel actually executes (the cost model's
+                                # "slots" feature; trailing pad blocks are
+                                # revisits of an already-done tile)
 
     @property
     def nnz_max(self) -> int:
@@ -156,6 +148,10 @@ class CPPlan:
     global_to_padded: tuple[np.ndarray, ...]   # per mode: (I_w,) int32
     padded_to_global: tuple[np.ndarray, ...]   # per mode: (padded,) int32, -1 pad
     norm: float                                 # ||X||_F for ALS fit
+    # Incremented by every applied schedule.rebalance migration; extends the
+    # plan-cache content signature so a rebalanced plan never aliases the
+    # static plan it evolved from.
+    rebalance_epoch: int = 0
 
     @property
     def nmodes(self) -> int:
@@ -167,45 +163,54 @@ class CPPlan:
 
 
 def _assign_groups(
-    hist: np.ndarray, n_groups: int, strategy: Strategy, block: int = 64
+    hist: np.ndarray, n_groups: int, strategy: Strategy
 ) -> np.ndarray:
-    """owner_group per index. All strategies keep the AMPED invariant (an
-    index is owned by exactly one group)."""
-    n_idx = hist.size
-    if n_idx == 0:
-        return np.zeros(0, np.int32)
-    if strategy == "equal_nnz":
-        # single group; the caller uses r = m so nonzeros split evenly.
-        return np.zeros(n_idx, np.int32)
-    if strategy == "uniform_index":
-        # paper §3.2 literal: equal-sized index partitions.
-        per = -(-n_idx // n_groups)
-        return (np.arange(n_idx) // per).astype(np.int32)
-    if strategy == "amped_cdf":
-        # contiguous split at nnz-CDF quantiles → near-equal work per group.
-        cdf = np.cumsum(hist, dtype=np.float64)
-        total = cdf[-1] if cdf.size else 0.0
-        if total == 0:
-            per = -(-n_idx // n_groups)
-            return (np.arange(n_idx) // per).astype(np.int32)
-        owner = np.minimum(
-            (cdf - hist / 2.0) * n_groups / total, n_groups - 1e-9
-        ).astype(np.int32)
-        return np.maximum.accumulate(owner)  # enforce monotone contiguity
-    if strategy == "amped_lpt":
-        # contiguous index blocks, longest-processing-time assignment — the
-        # static stand-in for the paper's many-shards + dynamic pull.
-        nb = -(-n_idx // block)
-        bc = np.add.reduceat(hist, np.arange(0, n_idx, block))
-        order = np.argsort(-bc, kind="stable")
-        load = np.zeros(n_groups, np.int64)
-        b_owner = np.zeros(nb, np.int32)
-        for b in order:
-            g = int(np.argmin(load))
-            b_owner[b] = g
-            load[g] += int(bc[b])
-        return b_owner[np.arange(n_idx) // block].astype(np.int32)
-    raise ValueError(f"unknown strategy {strategy!r}")
+    """owner_group per index, via the named static policy
+    (:mod:`repro.schedule.static`). All policies keep the AMPED invariant
+    (an index is owned by exactly one group)."""
+    return static_policies.get_policy(strategy).assign(hist, n_groups)
+
+
+def block_device_rows(lrow: np.ndarray, vals: np.ndarray, inds: np.ndarray,
+                      *, n_tiles: int, tile: int, block_p: int):
+    """Kernel-block one device's entries (the layout contract of
+    kernels/ops.py): group row-sorted entries by output tile, pad each
+    tile's run to a multiple of ``block_p`` (pad rows point at the tile's
+    first row, values 0 → exact no-ops), so no block straddles a tile.
+
+    ``lrow``: (k,) local output rows in [0, n_tiles*tile); ``vals``: (k,)
+    values; ``inds``: (k, N) index rows. Returns (rows_b, vals_b, inds_b,
+    b2t_b) where the first three have ``sum(ceil(per_tile/block_p))*block_p``
+    entries and ``b2t_b`` maps each block to its tile. Shared by
+    :func:`partition_mode` and the incremental re-blocking of
+    :mod:`repro.schedule.rebalance`.
+    """
+    k = lrow.size
+    nmodes = inds.shape[1] if inds.ndim == 2 else 0
+    tiles = lrow // tile
+    tc = np.bincount(tiles, minlength=n_tiles) if k else np.zeros(n_tiles, np.int64)
+    tc_pad = -(-tc // block_p) * block_p
+    tot = int(tc_pad.sum())
+    rows_b = np.zeros(tot, np.int64)
+    vals_b = np.zeros(tot, np.float32)
+    inds_b = np.zeros((tot, nmodes), np.int64)
+    b2t_b = np.zeros(tot // block_p, np.int64) if tot else np.zeros(0, np.int64)
+    off = 0
+    src = 0
+    tile_order = np.argsort(tiles, kind="stable")
+    for ti in range(n_tiles):
+        c, cp = int(tc[ti]), int(tc_pad[ti])
+        if cp == 0:
+            continue
+        pick = tile_order[src:src + c]
+        src += c
+        rows_b[off:off + c] = lrow[pick]
+        rows_b[off + c:off + cp] = ti * tile  # no-op pad rows inside tile
+        vals_b[off:off + c] = vals[pick]
+        inds_b[off:off + c] = inds[pick]
+        b2t_b[off // block_p:(off + cp) // block_p] = ti
+        off += cp
+    return rows_b, vals_b, inds_b, b2t_b
 
 
 def _layout_rows(owner: np.ndarray, n_groups: int, rows_max: int):
@@ -247,8 +252,10 @@ def partition_mode(
     block_p = DEFAULT_BLOCK_P if block_p is None else block_p
     m = num_devices
     hist = t.mode_histogram(mode)
-    if strategy == "equal_nnz":
-        r = m
+    policy = static_policies.get_policy(strategy)
+    forced_r = policy.replication(hist, m)
+    if forced_r is not None:
+        r = forced_r
     elif replication is None:
         r = auto_replication(hist, m)
     else:
@@ -290,34 +297,14 @@ def partition_mode(
     # of block_p so no block straddles a tile; then pad devices to the global
     # max block count.
     n_tiles = rows_max // tile
-    dev_rows, dev_vals, dev_inds, dev_b2t = [], [], [], []
     nmodes = t.nmodes
+    dev_rows, dev_vals, dev_inds, dev_b2t = [], [], [], []
     for dev, sel in enumerate(dev_lists_idx):
         g = dev // r
         lrow = (nz_padded_row[sel] - g * rows_max).astype(np.int64)
-        tiles = lrow // tile
-        tc = np.bincount(tiles, minlength=n_tiles) if sel.size else np.zeros(n_tiles, np.int64)
-        tc_pad = -(-tc // block_p) * block_p
-        tot = int(tc_pad.sum())
-        rows_b = np.zeros(tot, np.int64)
-        vals_b = np.zeros(tot, np.float32)
-        inds_b = np.zeros((tot, nmodes), np.int64)
-        b2t_b = np.zeros(tot // block_p, np.int64) if tot else np.zeros(0, np.int64)
-        off = 0
-        src = 0
-        tile_order = np.argsort(tiles, kind="stable")
-        for ti in range(n_tiles):
-            c, cp = int(tc[ti]), int(tc_pad[ti])
-            if cp == 0:
-                continue
-            pick = tile_order[src:src + c]
-            src += c
-            rows_b[off:off + c] = lrow[pick]
-            rows_b[off + c:off + cp] = ti * tile  # no-op pad rows inside tile
-            vals_b[off:off + c] = val_sorted[sel][pick]
-            inds_b[off:off + c] = ind_sorted[sel][pick]
-            b2t_b[off // block_p:(off + cp) // block_p] = ti
-            off += cp
+        rows_b, vals_b, inds_b, b2t_b = block_device_rows(
+            lrow, val_sorted[sel], ind_sorted[sel],
+            n_tiles=n_tiles, tile=tile, block_p=block_p)
         dev_rows.append(rows_b)
         dev_vals.append(vals_b)
         dev_inds.append(inds_b)
@@ -376,6 +363,7 @@ def partition_mode(
         tile_visited=visited,
         nnz_true=nnz_true,
         rows_owned=rows_owned,
+        blocks_true=np.array([x.size for x in dev_b2t], np.int64),
     )
     return part, g2p, p2g
 

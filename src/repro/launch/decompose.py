@@ -6,10 +6,16 @@
         --profile twitch --scale 2e-4            # auto-r + blocked kernel
     PYTHONPATH=src python -m repro.launch.decompose --preset fused \
         --set kernel.num_buffers=3 --set runtime.tol=0   # dotted overrides
+    PYTHONPATH=src python -m repro.launch.decompose --preset paper \
+        --set partition.strategy=equal_nnz --rebalance   # dynamic scheduler
 
 Runs the staged repro.api pipeline and reports preprocessing (plan) time
 separately from execution time, the way the paper does — pass --plan-cache
-to pay preprocessing once across invocations.
+to pay preprocessing once across invocations. With --rebalance (or
+--measure-balance) it also prints the scheduler's imbalance report:
+per-mode measured vs cost-model-predicted max/mean EC-time ratios, the
+calibrated coefficients, and every rebalance event (sweep, migrations,
+nonzeros moved).
 """
 from __future__ import annotations
 
@@ -37,6 +43,14 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--no-resume", action="store_true",
                     help="with --ckpt: start fresh instead of resuming")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="enable the dynamic load balancer "
+                         "(schedule.rebalance=on; tune via --set "
+                         "schedule.cadence=... etc.)")
+    ap.add_argument("--measure-balance", action="store_true",
+                    help="collect per-device EC-time telemetry and report "
+                         "imbalance without migrating "
+                         "(schedule.rebalance=measure)")
     args = ap.parse_args()
 
     import repro.api as api
@@ -47,12 +61,18 @@ def main():
         cfg = cfg.with_overrides({"runtime.num_devices": args.devices})
     if args.ckpt:
         cfg = cfg.with_overrides({"runtime.checkpoint_dir": args.ckpt})
+    if args.rebalance:
+        cfg = cfg.with_overrides({"schedule.rebalance": "on"})
+    elif args.measure_balance:
+        cfg = cfg.with_overrides({"schedule.rebalance": "measure"})
     cfg = api.apply_set_args(cfg, args.set_args)
 
     t = make_profile_tensor(args.profile, scale=args.scale, seed=0)
     print(f"{args.profile} @ {args.scale}: shape={t.shape} nnz={t.nnz} "
           f"preset={args.preset} rank={cfg.rank} "
-          f"variant={cfg.kernel.resolved_variant()}")
+          f"variant={cfg.kernel.resolved_variant()} "
+          f"policy={cfg.resolved_policy()} "
+          f"rebalance={cfg.schedule.rebalance}")
 
     t0 = time.time()
     plan = api.plan(t, cfg, cache_dir=args.plan_cache)
@@ -69,6 +89,24 @@ def main():
     print(f"plan {t_plan:.1f}s{' (cache hit)' if hit else ''} | "
           f"compile {t_compile:.1f}s | execute {t_exec:.1f}s")
     print(f"{res.sweeps} sweeps; final fit {res.fits[-1]:.5f}")
+
+    report = solver.imbalance_report()
+    if report.get("enabled"):
+        c = report["coefficients"]
+        print(f"schedule: epoch {report['rebalance_epoch']} | calibrated "
+              f"sec_per_nnz={c['sec_per_nnz']:.3e} "
+              f"sec_per_slot={c['sec_per_slot']:.3e} "
+              f"sec_fixed={c['sec_fixed']:.3e}")
+        for mode, row in report["per_mode"].items():
+            meas = row["measured_imbalance"]
+            print(f"  mode {mode} (r={row['r']}): measured max/mean "
+                  f"{meas:.3f} | modelled {row['modelled_imbalance']:.3f}")
+        for ev in report["events"]:
+            worst = max(ev["imbalance"].values())
+            line = (f"  sweep {ev['sweep']}: worst imbalance {worst:.3f}, "
+                    f"{ev['migrations']} migration(s), "
+                    f"{ev['moved_nnz']} nnz moved")
+            print(line)
 
 
 if __name__ == "__main__":

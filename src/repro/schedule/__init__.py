@@ -1,0 +1,46 @@
+"""repro.schedule — the scheduling subsystem (partitioning policies + dynamic
+load balancing).
+
+AMPED's speedup rests on two legs (paper §1): a *partitioning strategy* and a
+*dynamic load balancing scheme* that minimizes device idle time. This package
+holds both, split into three layers:
+
+  * :mod:`repro.schedule.cost`      — the explicit per-device cost model
+    (nnz work, padded kernel slots, exchange volume, block count) that every
+    scheduling decision is expressed against, plus EWMA calibration of its
+    coefficients from measured EC times.
+  * :mod:`repro.schedule.static`    — the four one-shot partitioning
+    strategies (``amped_cdf | amped_lpt | uniform_index | equal_nnz``) as
+    thin policies over the cost model. :mod:`repro.core.partition` consumes
+    these and keeps only layout construction (segment sorting, blocking,
+    padding, index translation).
+  * :mod:`repro.schedule.rebalance` — the dynamic half: per-mode per-device
+    EC wall-time telemetry, imbalance detection, block-granular nnz
+    migrations between replication-group members, and the incremental plan
+    update that applies them without changing any device array shape (no
+    recompile).
+
+The public API (:mod:`repro.api`) threads a frozen ``ScheduleConfig`` through
+``plan``/``compile``; :class:`repro.api.CPSolver` owns a
+:class:`~repro.schedule.rebalance.Rebalancer` when rebalancing is enabled.
+"""
+from repro.schedule.cost import (CostCoefficients, DEFAULT_COEFFS,
+                                 EwmaCostModel, device_features,
+                                 exchange_bytes, fit_coefficients,
+                                 index_work, predict_times)
+from repro.schedule.static import (POLICIES, StaticPolicy, auto_replication,
+                                   get_policy)
+from repro.schedule.rebalance import (GroupMigration, Rebalancer,
+                                      ReplanDecision, apply_rebalance,
+                                      measure_mode_device_times)
+
+__all__ = [
+    # cost model
+    "CostCoefficients", "DEFAULT_COEFFS", "EwmaCostModel", "device_features",
+    "exchange_bytes", "fit_coefficients", "index_work", "predict_times",
+    # static policies
+    "POLICIES", "StaticPolicy", "auto_replication", "get_policy",
+    # dynamic rebalancing
+    "GroupMigration", "Rebalancer", "ReplanDecision", "apply_rebalance",
+    "measure_mode_device_times",
+]

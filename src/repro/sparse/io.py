@@ -9,6 +9,7 @@ scale.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 
 import numpy as np
 
@@ -16,20 +17,46 @@ from repro.core.coo import SparseTensor, random_sparse
 
 __all__ = ["read_tns", "write_tns", "DATASET_PROFILES", "make_profile_tensor"]
 
+# Lines parsed per batch. Each batch becomes two ndarray chunks immediately,
+# so peak Python-object overhead is O(chunk_lines), not O(nnz) — at billion
+# scale the old per-line list-append parser held ~nnz list/int objects
+# (tens of GB of pointer overhead) before the first ndarray existed.
+READ_TNS_CHUNK_LINES = 1 << 20
 
-def read_tns(path: str) -> SparseTensor:
-    ind, val = [], []
+
+def read_tns(path: str, *, chunk_lines: int = READ_TNS_CHUNK_LINES
+             ) -> SparseTensor:
+    """Read a FROSTT ``.tns`` text file (1-based coordinates, value last).
+
+    Chunked: lines are consumed in fixed-size batches, each parsed straight
+    into ndarrays by ``np.loadtxt`` (C tokenizer, no per-line Python lists).
+    ``#``/``%`` comment lines and blank lines are skipped anywhere in the
+    file.
+    """
+    ind_chunks: list[np.ndarray] = []
+    val_chunks: list[np.ndarray] = []
+    ncols = None
     with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if not line or line.startswith(("#", "%")):
-                continue
-            parts = line.split()
-            ind.append([int(p) - 1 for p in parts[:-1]])
-            val.append(float(parts[-1]))
-    ind = np.asarray(ind, np.int64)
+        for batch in iter(
+                lambda: list(itertools.islice(f, chunk_lines)), []):
+            arr = np.loadtxt(batch, dtype=np.float64, comments=("#", "%"),
+                             ndmin=2)
+            if arr.size == 0:
+                continue  # batch was all comments/blanks
+            if ncols is None:
+                ncols = arr.shape[1]
+            elif arr.shape[1] != ncols:
+                raise ValueError(
+                    f"{path}: inconsistent column count "
+                    f"({arr.shape[1]} vs {ncols})")
+            ind_chunks.append(arr[:, :-1].astype(np.int64) - 1)
+            val_chunks.append(arr[:, -1].astype(np.float32))
+    if not ind_chunks:
+        raise ValueError(f"{path}: no nonzeros")
+    ind = np.concatenate(ind_chunks)
+    val = np.concatenate(val_chunks)
     shape = tuple(int(s) for s in (ind.max(axis=0) + 1))
-    return SparseTensor(ind.astype(np.int32), np.asarray(val, np.float32), shape)
+    return SparseTensor(ind.astype(np.int32), val, shape)
 
 
 def write_tns(path: str, t: SparseTensor) -> None:

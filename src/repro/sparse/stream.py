@@ -3,16 +3,27 @@
 The paper stores all per-mode tensor copies in host memory and moves each
 mode's shards to its GPU before that mode's computation. On TPU pods the
 same pattern applies when the tensor exceeds aggregate HBM: shards for mode
-d+1 are prefetched (async ``jax.device_put``) while mode d computes —
-compute/communication overlap that the paper leaves implicit.
+d+1 are prefetched while mode d computes — compute/transfer overlap the
+paper leaves implicit.
 
 ``ShardStreamer`` owns the host-resident :class:`CPPlan` and yields
 device-resident :class:`DeviceArrays` per mode, keeping at most
-``prefetch+1`` modes resident.
+``prefetch+1`` modes resident (counting in-flight prefetches). Prefetch is
+*actually* asynchronous: ``get(d)`` dispatches mode d+1's ``device_put`` on
+a background thread and returns immediately with mode d's arrays — the host
+only blocks on a prefetch when that mode is itself requested. Eviction is
+LRU over resident modes.
+
+The dynamic rebalancer (:mod:`repro.schedule.rebalance`) swaps migrated
+modes in-place via :meth:`update_plan`: the stale shards are dropped and the
+migrated modes' new shards prefetched in the background, so the sweep after
+a rebalance point pays no synchronous re-placement.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Iterable
 
 from jax.sharding import Mesh
 
@@ -31,25 +42,71 @@ class ShardStreamer:
         self.group_axes = group_axes
         self.sub_axis = sub_axis
         self._resident: OrderedDict[int, DeviceArrays] = OrderedDict()
+        self._pending: OrderedDict[int, Future] = OrderedDict()
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="shard-prefetch")
 
-    def _load(self, mode: int) -> DeviceArrays:
-        if mode not in self._resident:
-            self._resident[mode] = shard_plan_mode(
-                self.plan.modes[mode], self.mesh,
-                group_axes=self.group_axes, sub_axis=self.sub_axis)
+    def _build(self, mode: int) -> DeviceArrays:
+        return shard_plan_mode(self.plan.modes[mode], self.mesh,
+                               group_axes=self.group_axes,
+                               sub_axis=self.sub_axis)
+
+    def _dispatch(self, mode: int) -> None:
+        """Start moving ``mode``'s shards to device without blocking."""
+        if mode in self._resident or mode in self._pending:
+            return
+        self._pending[mode] = self._pool.submit(self._build, mode)
+
+    def _wait(self, mode: int) -> DeviceArrays:
+        """Block until ``mode`` is resident (integrating a pending prefetch
+        or loading synchronously on a cold miss)."""
+        fut = self._pending.pop(mode, None)
+        if fut is not None:
+            self._resident[mode] = fut.result()
+        elif mode not in self._resident:
+            self._resident[mode] = self._build(mode)
         self._resident.move_to_end(mode)
         return self._resident[mode]
 
     def _evict(self) -> None:
-        while len(self._resident) > self.prefetch + 1:
+        """LRU-evict so resident + in-flight modes never exceed
+        ``prefetch + 1`` (in-flight arrays hold device memory too)."""
+        while len(self._resident) + len(self._pending) > self.prefetch + 1 \
+                and self._resident:
             _, arrays = self._resident.popitem(last=False)
             del arrays  # drop device references → frees HBM
 
+    def resident_modes(self) -> list[int]:
+        """Modes currently holding (or acquiring) device memory, LRU
+        first."""
+        return list(self._resident) + list(self._pending)
+
     def get(self, mode: int) -> DeviceArrays:
-        """Shards for ``mode``; prefetches ``mode+1`` (async device_put)."""
-        cur = self._load(mode)
+        """Shards for ``mode``; dispatches an async prefetch of
+        ``(mode+1) % nmodes`` before returning."""
+        cur = self._wait(mode)
         nxt = (mode + 1) % self.plan.nmodes
         if self.prefetch > 0 and nxt != mode:
-            self._load(nxt)
+            self._dispatch(nxt)
         self._evict()
         return cur
+
+    def update_plan(self, plan: CPPlan,
+                    modes: Iterable[int] | None = None) -> None:
+        """Swap in a rebalanced plan: drop the listed modes' stale shards
+        (all modes when None) and prefetch their replacements in the
+        background. Array shapes are unchanged by construction
+        (schedule.rebalance migrates within padding headroom), so consumers'
+        jitted functions stay valid."""
+        stale = set(range(self.plan.nmodes) if modes is None else modes)
+        self.plan = plan
+        for mode in stale:
+            fut = self._pending.pop(mode, None)
+            if fut is not None:
+                fut.cancel() or fut.result()  # settle, then drop
+            self._resident.pop(mode, None)
+        for mode in sorted(stale):
+            if len(self._resident) + len(self._pending) >= self.prefetch + 1:
+                break  # respect the residency bound; the rest load on demand
+            self._dispatch(mode)
+        self._evict()

@@ -72,6 +72,41 @@ def test_tns_roundtrip(tmp_path):
                                atol=1e-5)
 
 
+def test_tns_roundtrip_multichunk(tmp_path):
+    """The chunked reader: a file spanning many read batches, with comment
+    and blank lines interleaved, round-trips exactly (same nonzero multiset,
+    1-based convention preserved)."""
+    t = random_sparse((31, 17, 13), 400, seed=6)
+    p = str(tmp_path / "chunked.tns")
+    write_tns(p, t)
+    lines = open(p).read().splitlines()
+    # sprinkle comments/blanks so some chunks are partially (or fully) noise
+    noisy = ["# frostt header", "% matlab-style comment", ""]
+    for i, line in enumerate(lines):
+        noisy.append(line)
+        if i % 7 == 0:
+            noisy.append("# interleaved comment")
+        if i % 11 == 0:
+            noisy.append("")
+    open(p, "w").write("\n".join(noisy) + "\n")
+    t2 = read_tns(p, chunk_lines=23)  # dozens of chunks
+    assert t2.nnz == t.nnz
+    got = sorted(map(tuple, np.c_[t2.indices, t2.values].tolist()))
+    want = sorted(map(tuple, np.c_[t.indices, t.values].tolist()))
+    assert got == want
+
+
+def test_tns_chunk_sizes_agree(tmp_path):
+    t = random_sparse((9, 9, 9), 150, seed=7)
+    p = str(tmp_path / "x.tns")
+    write_tns(p, t)
+    a = read_tns(p, chunk_lines=1)       # degenerate: one line per chunk
+    b = read_tns(p, chunk_lines=10**6)   # single chunk
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.values, b.values)
+    assert a.shape == b.shape
+
+
 def test_profiles_scaled():
     for name, prof in DATASET_PROFILES.items():
         t = make_profile_tensor(name, scale=2e-6, seed=1)

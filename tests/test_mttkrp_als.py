@@ -95,10 +95,10 @@ def test_streamer_prefetch(small_tensor):
     mesh = dm.cp_mesh(1, 1)
     s = ShardStreamer(plan, mesh, prefetch=1)
     d0 = s.get(0)
-    assert 1 in s._resident  # next mode prefetched
+    assert 1 in s.resident_modes()  # next mode prefetch dispatched (async)
     s.get(1)
     s.get(2)
-    assert len(s._resident) <= 2  # eviction keeps prefetch+1 resident
+    assert len(s.resident_modes()) <= 2  # eviction keeps prefetch+1 alive
     assert d0.values.shape[-1] == plan.modes[0].nnz_max
 
 

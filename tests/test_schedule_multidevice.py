@@ -1,0 +1,121 @@
+"""End-to-end dynamic rebalancing on 4 forced host devices (subprocess, per
+the dry-run isolation rule): on a hot-index skewed tensor,
+
+  * ``rebalance="measure"`` leaves factors BITWISE identical to
+    ``rebalance="off"`` (telemetry only — the probes never touch state),
+  * ``rebalance="on"`` reduces the max/mean per-device EC-time ratio across
+    sweeps versus the ``measure`` baseline measured in the SAME process
+    (same probe-overhead regime, so the comparison is noise-robust), while
+    converging to the same fit within tolerance, via shape-preserving
+    block-granular migrations (epoch bumped, zero recompilation of the
+    sweep updates).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import json
+import numpy as np
+import jax
+
+assert jax.device_count() == 4, jax.device_count()
+
+import repro.api as api
+from repro.core.coo import SparseTensor
+
+# Hot-index mode 0: 30% of nonzeros on 3 indices, the rest scattered over
+# 65536 — the scattered members' equal-nnz chunks land ~1 entry per output
+# tile, so per-tile padding makes them execute ~18x the kernel slots of the
+# hot member (blocks_true ~[154, 2486, 2853, 2865] at equal nnz_true): the
+# misprediction the rebalancer corrects.
+NNZ = 80000
+rng = np.random.default_rng(0)
+hot = NNZ * 3 // 10
+i0 = np.concatenate([rng.integers(0, 3, hot),
+                     rng.integers(3, 65536, NNZ - hot)])
+t = SparseTensor(
+    np.stack([i0, rng.integers(0, 256, NNZ), rng.integers(0, 256, NNZ)], 1
+             ).astype(np.int32),
+    rng.standard_normal(NNZ).astype(np.float32), (65536, 256, 256)
+).deduplicated()
+
+base = api.paper({"rank": 16, "runtime.tol": 0.0,
+                  "partition.strategy": "equal_nnz"})
+results = {"nnz": t.nnz}
+
+def run(rebalance):
+    cfg = base.with_overrides({
+        "schedule.rebalance": rebalance, "schedule.cadence": 1,
+        "schedule.imbalance_threshold": 1.1,
+        "schedule.migration_budget": 0.4,
+        "schedule.probe_repeats": 2})  # best-of-2 kills transient spikes
+    solver = api.compile(api.plan(t, cfg), cfg)
+    res = solver.run(5)
+    traj = [max(e["imbalance"].values()) for e in solver.schedule_events]
+    return solver, res, traj
+
+s_plain = api.compile(api.plan(t, base), base)
+r_plain = s_plain.run(5)
+s_meas, r_meas, traj_off = run("measure")
+s_on, r_on, traj_on = run("on")
+
+# measure-mode must be bitwise identical to scheduler-off
+results["measure_bitwise"] = bool(all(
+    np.array_equal(a, b) for a, b in zip(r_meas.factors, r_plain.factors)))
+results["measure_fits_equal"] = bool(r_meas.fits == r_plain.fits)
+results["plan_epoch_off"] = int(s_meas.plan.rebalance_epoch)
+
+results.update({
+    "traj_off": traj_off,
+    "traj_on": traj_on,
+    "moved_nnz": int(sum(e["moved_nnz"] for e in s_on.schedule_events)),
+    "epoch": int(s_on.plan.rebalance_epoch),
+    "fit_off": float(r_plain.fits[-1]),
+    "fit_on": float(r_on.fits[-1]),
+    "mode0_nnz_after": [int(x) for x in s_on.plan.modes[0].nnz_true],
+    "mode0_blocks_after": [int(x) for x in s_on.plan.modes[0].blocks_true],
+    "report": s_on.imbalance_report()["per_mode"][0],
+})
+print("RESULTS_JSON:" + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_rebalance_reduces_imbalance_same_fit():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1500)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = next(l for l in proc.stdout.splitlines()
+                if l.startswith("RESULTS_JSON:"))
+    r = json.loads(line[len("RESULTS_JSON:"):])
+
+    # telemetry alone never perturbs the solve
+    assert r["measure_bitwise"], "measure-mode factors must be bitwise equal"
+    assert r["measure_fits_equal"]
+    assert r["plan_epoch_off"] == 0
+
+    # migrations happened and took effect incrementally
+    assert r["moved_nnz"] > 0
+    assert r["epoch"] >= 1
+    # nnz moved away from the originally-equal split toward the hot member
+    nnz_after = r["mode0_nnz_after"]
+    assert max(nnz_after) - min(nnz_after) > 0
+
+    # the static plan stays imbalanced without migrations; with them the
+    # max/mean per-device EC-time ratio measurably drops (>=10% vs the
+    # same-process baseline; min over the last two points so one noisy
+    # probe cannot flip the verdict)
+    off_tail = sum(r["traj_off"][-2:]) / 2
+    on_final = min(r["traj_on"][-2:])
+    assert off_tail > 1.15, (r["traj_off"], r["traj_on"])
+    assert on_final < 0.9 * off_tail, (r["traj_off"], r["traj_on"])
+
+    # same decomposition: fit agrees within tolerance
+    assert abs(r["fit_on"] - r["fit_off"]) < 5e-3, (r["fit_on"], r["fit_off"])

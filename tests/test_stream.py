@@ -1,0 +1,114 @@
+"""ShardStreamer contract: bounded residency, LRU eviction, wrap-around
+prefetch, async dispatch, and rebalance-driven shard swaps."""
+import numpy as np
+import pytest
+
+from repro.core import mttkrp as dm
+from repro.core.partition import build_plan
+from repro.sparse.stream import ShardStreamer
+
+
+@pytest.fixture(scope="module")
+def plan4(small_tensor_4mode):
+    return build_plan(small_tensor_4mode, 1)
+
+
+@pytest.fixture()
+def mesh():
+    return dm.cp_mesh(1, 1)
+
+
+def _streamer(plan, mesh, prefetch=1, loads=None):
+    s = ShardStreamer(plan, mesh, prefetch=prefetch)
+    if loads is not None:
+        orig = s._build
+
+        def counting_build(mode):
+            loads.append(mode)
+            return orig(mode)
+
+        s._build = counting_build
+    return s
+
+
+def test_residency_never_exceeds_prefetch_plus_one(plan4, mesh):
+    for prefetch in (0, 1, 2):
+        s = _streamer(plan4, mesh, prefetch=prefetch)
+        for step in range(12):
+            s.get(step % plan4.nmodes)
+            assert len(s.resident_modes()) <= prefetch + 1, \
+                (prefetch, step, s.resident_modes())
+
+
+def test_eviction_order_is_lru(plan4, mesh):
+    s = _streamer(plan4, mesh, prefetch=1)
+    s.get(0)   # resident {0}, pending {1}
+    s.get(1)   # 1 integrated + MRU, 2 dispatched, 0 evicted (LRU)
+    s.get(2)
+    alive = s.resident_modes()
+    assert 0 not in alive
+    assert 2 in alive          # current mode always alive
+    # revisiting a resident mode refreshes it: it must survive the next get
+    s.get(3)
+    s.get(3)
+    assert 3 in s.resident_modes()
+
+
+def test_wraparound_prefetch(plan4, mesh):
+    s = _streamer(plan4, mesh, prefetch=1)
+    last = plan4.nmodes - 1
+    s.get(last)
+    assert 0 in s.resident_modes()  # mode nmodes-1 prefetches mode 0
+    loads = []
+    s2 = _streamer(plan4, mesh, prefetch=1, loads=loads)
+    s2.get(last)
+    s2.get(0)   # joins the wrap prefetch (and dispatches mode 1)
+    s2._wait(0)
+    assert loads[:2] == [last, 0]
+    assert loads.count(0) == 1  # the wrap prefetch satisfied get(0): no reload
+
+
+def test_prefetch_is_async_dispatch(plan4, mesh):
+    """get() must dispatch — not synchronously load — the next mode."""
+    import threading
+    started = threading.Event()
+    release = threading.Event()
+    loads = []
+    s = _streamer(plan4, mesh, prefetch=1, loads=loads)
+    orig = s._build
+
+    def slow_build(mode, _orig=orig):
+        if mode == 1:
+            started.set()
+            assert release.wait(timeout=10)
+        return _orig(mode)
+
+    s._build = slow_build
+    d0 = s.get(0)            # returns while mode 1 is still loading
+    assert d0 is not None
+    assert started.wait(timeout=10)
+    assert 1 not in s._resident and 1 in s.resident_modes()
+    release.set()
+    s.get(1)                 # joins the in-flight prefetch
+    assert 1 in s._resident
+
+
+def test_zero_prefetch_never_dispatches(plan4, mesh):
+    loads = []
+    s = _streamer(plan4, mesh, prefetch=0, loads=loads)
+    s.get(0)
+    s.get(1)
+    assert loads == [0, 1]   # strictly on-demand
+
+
+def test_update_plan_swaps_migrated_modes(plan4, mesh, small_tensor_4mode):
+    s = _streamer(plan4, mesh, prefetch=plan4.nmodes)
+    before = [s.get(d) for d in range(plan4.nmodes)]
+    plan_b = build_plan(small_tensor_4mode, 1)  # fresh arrays, same shapes
+    s.update_plan(plan_b, modes=[1])
+    after = [s.get(d) for d in range(plan4.nmodes)]
+    assert after[0] is before[0]        # untouched modes keep their shards
+    assert after[1] is not before[1]    # migrated mode re-placed
+    np.testing.assert_array_equal(np.asarray(after[1].values),
+                                  plan_b.modes[1].values.reshape(
+                                      after[1].values.shape))
