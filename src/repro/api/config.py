@@ -140,9 +140,59 @@ class KernelConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ExchangeConfig:
-    """Inter-device factor exchange (paper Algorithm 3)."""
+    """Inter-device factor exchange (paper Algorithm 3; see
+    :mod:`repro.comm`).
 
-    ring: bool = True               # True = ring all-gather, False = native
+    ``variant`` selects the gather schedule with the same precedence as
+    kernel variants (explicit > ``AMPED_EXCHANGE_VARIANT`` env > the legacy
+    ``ring`` flag > default ``ring``):
+
+      * ``"allgather"`` — XLA's native ``lax.all_gather`` (ICI ring/torus).
+      * ``"ring"``      — the paper's explicit Algorithm-3 ``ppermute`` ring.
+      * ``"overlap"``   — chunked, double-buffered ring: chunk k+1's wire
+        time hides behind chunk k's consumption (``chunk_rows`` sets the
+        chunk size; ``None`` + ``autotune_chunk`` sweeps it with the JSON
+        autotune cache, else a default split applies).
+
+    ``merge`` selects the intra-group reduce for replication r>1
+    (``"psum_scatter"`` — XLA fused; ``"ring_rs"`` — explicit ring
+    reduce-scatter). ``wire_dtype="bfloat16"`` halves exchange volume by
+    casting payloads to bf16 on the wire while accumulating merges in fp32
+    (a bf16 wire always takes the ``ring_rs`` merge schedule — XLA's
+    ``psum_scatter`` would reduce in the wire dtype).
+    """
+
+    ring: bool = True               # legacy: True = ring, False = allgather
+    variant: str | None = None      # "allgather"|"ring"|"overlap"|None = env
+    merge: str | None = None        # "psum_scatter"|"ring_rs"|None = env
+    chunk_rows: int | None = None   # overlap row-chunk size (None = auto)
+    wire_dtype: str = "float32"     # "float32" | "bfloat16"
+    autotune_chunk: bool = False    # sweep chunk_rows (overlap only)
+
+    def __post_init__(self):
+        from repro import comm
+        if self.variant is not None and \
+                self.variant not in comm.GATHER_VARIANTS:
+            raise ValueError(
+                f"exchange.variant must be one of "
+                f"{sorted(comm.GATHER_VARIANTS)} (or None), "
+                f"got {self.variant!r}")
+        if self.merge is not None and self.merge not in comm.MERGE_VARIANTS:
+            raise ValueError(
+                f"exchange.merge must be one of "
+                f"{sorted(comm.MERGE_VARIANTS)} (or None), got {self.merge!r}")
+        if self.wire_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"exchange.wire_dtype must be 'float32' or 'bfloat16', "
+                f"got {self.wire_dtype!r}")
+        if self.chunk_rows is not None and self.chunk_rows < 1:
+            raise ValueError("exchange.chunk_rows must be >= 1")
+
+    def resolved_variant(self) -> str:
+        """Resolve to a concrete gather variant (argument > env > legacy
+        ``ring`` flag > default)."""
+        from repro import comm
+        return comm.resolve_variant(self.variant, self.ring)
 
 
 @dataclasses.dataclass(frozen=True)

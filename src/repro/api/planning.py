@@ -207,7 +207,8 @@ def plan(tensor: SparseTensor, config: DecomposeConfig, *,
         entry = os.path.join(cache_dir, sig[:32])
         if os.path.exists(os.path.join(entry, "manifest.json")):
             try:
-                p = load_plan(entry, expect_signature=sig)
+                p = partition_mod.validate_plan(
+                    load_plan(entry, expect_signature=sig))
                 CACHE_STATS["hits"] += 1
                 return p
             except (PlanSignatureError, OSError, KeyError, ValueError):

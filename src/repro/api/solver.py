@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import comm
 from repro.api.config import DecomposeConfig
 from repro.core import als as als_mod
 from repro.core import mttkrp as dmttkrp
@@ -59,8 +60,10 @@ class CPSolver:
         self.streamer = ShardStreamer(plan, mesh, prefetch=plan.nmodes)
         kernel_kw = config.kernel.mttkrp_kwargs(nmodes=plan.nmodes,
                                                 rank=config.rank)
+        self.exchange_spec = comm.resolve_exchange_spec(
+            config.exchange, plan=plan, rank=config.rank, mesh=mesh)
         self.updates = als_mod.make_sweep_updates(
-            plan, mesh, ring=config.exchange.ring, **kernel_kw)
+            plan, mesh, exchange_spec=self.exchange_spec, **kernel_kw)
         self.rebalancer = None
         if config.schedule.telemetry_enabled:
             from repro.schedule.rebalance import Rebalancer
@@ -82,6 +85,20 @@ class CPSolver:
     def dev_arrays(self) -> list:
         """Per-mode device shards (kept resident by the streamer)."""
         return [self.streamer.get(d) for d in range(self.plan.nmodes)]
+
+    # -- teardown ----------------------------------------------------------
+    def close(self) -> None:
+        """Release the session's background resources: cancels the
+        streamer's pending prefetches and joins its executor so no
+        in-flight ``device_put`` outlives the solver (and can touch a freed
+        plan). Idempotent; the solver is unusable afterwards."""
+        self.streamer.close()
+
+    def __enter__(self) -> "CPSolver":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- state lifecycle ---------------------------------------------------
     def reset(self) -> None:
@@ -225,6 +242,37 @@ class CPSolver:
             "events": self.schedule_events,
         }
 
+    def exchange_report(self, *, measure: bool = True) -> dict:
+        """Modelled — and, with ``measure``, HLO-measured — per-device
+        exchange bytes for one ALS sweep under the resolved
+        :class:`~repro.comm.ExchangeSpec`. Measurement lowers+compiles each
+        mode's update once more against the live arrays and parses the
+        optimized HLO's collectives (loop-weighted), so it is a deliberate
+        sync point — what ``launch.decompose --exchange-report`` prints."""
+        spec = self.exchange_spec
+        report = {
+            "spec": {"variant": spec.variant, "merge": spec.merge,
+                     "chunk_rows": spec.chunk_rows,
+                     "wire_dtype": spec.wire_dtype},
+            "modelled": comm.modelled_exchange_bytes(
+                self.plan, self.config.rank, wire_dtype=spec.wire_dtype),
+        }
+        if measure:
+            measured, total = [], 0.0
+            s = self.state
+            for d in range(self.plan.nmodes):
+                others = [s.factors[w] for w in range(self.plan.nmodes)
+                          if w != d]
+                hlo = self.updates[d].lower(
+                    s.factors[d], self.streamer.get(d), others,
+                    s.grams).compile().as_text()
+                m = comm.measured_exchange_bytes(hlo)
+                measured.append(m)
+                total += m["total_bytes"]
+            report["measured"] = {"per_mode": measured,
+                                  "sweep_total_bytes": total}
+        return report
+
     def result(self) -> CPResult:
         """Snapshot the current state as a host-side :class:`CPResult`
         (forces a sync: factors unpadded to global layout, fits to floats)."""
@@ -244,6 +292,8 @@ def compile(plan: CPPlan, config: DecomposeConfig, *,
     (group, sub) mesh (unless one is passed), place every mode's shards, and
     build the jitted per-mode updates. Device-touching but tensor-data-free —
     cheap relative to ``plan()`` at scale."""
+    from repro.core.partition import validate_plan
+    validate_plan(plan)  # fail loudly before any device placement
     if mesh is None:
         mesh = dmttkrp.cp_mesh(plan.num_devices, plan.modes[0].r)
     return CPSolver(plan, config, mesh)

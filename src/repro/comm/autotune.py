@@ -1,0 +1,119 @@
+"""Chunk-size autotuner for the ``overlap`` exchange variant.
+
+The overlap gather's one launch parameter is the row-chunk size: too coarse
+and there is nothing to pipeline, too fine and per-collective latency
+dominates. The sweet spot depends on (rows, rank, device count, wire dtype,
+backend) — not on the tensor data — so the tuner times a handful of chunk
+counts on the *actual mesh* with synthetic payloads and caches the winner
+in the same JSON cache file the EC autotuner owns
+(``kernels/autotune.py``; keys are namespaced ``xchg_...`` so the two
+tuners share one artifact and one ``AMPED_AUTOTUNE_CACHE`` override).
+
+An entry is only reused when its recorded candidate grid matches the
+requested one — the same staleness discipline as the EC cache.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import collectives
+from repro.compat import shard_map
+from repro.kernels import autotune as ec_autotune
+
+__all__ = ["autotune_chunk_rows", "DEFAULT_NUM_CHUNK_CANDIDATES"]
+
+DEFAULT_NUM_CHUNK_CANDIDATES = (1, 2, 4, 8)
+
+_MEMO: dict[str, tuple[dict, int]] = {}  # key -> (grid, winning chunk_rows)
+
+
+def _cache_key(rows: int, rank: int, m: int, wire: str, backend: str) -> str:
+    return f"xchg_overlap_rows{rows}_r{rank}_m{m}_{wire}_{backend}"
+
+
+def _candidates(rows: int, num_chunks) -> list[int]:
+    out = []
+    for c in num_chunks:
+        cr = max(1, -(-rows // int(c)))
+        if cr not in out:
+            out.append(cr)
+    return out
+
+
+def _time_chunk(rows: int, rank: int, mesh, all_axes, chunk_rows: int,
+                wire_dtype, repeats: int, seed: int = 0) -> float:
+    m = int(np.prod([mesh.shape[a] for a in all_axes]))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m * rows, rank)).astype(np.float32))
+
+    def gather(local):
+        return collectives.overlap_all_gather(
+            local, all_axes, chunk_rows=chunk_rows,
+            wire_dtype=None if wire_dtype in (None, "float32")
+            else jnp.dtype(wire_dtype))
+
+    fn = jax.jit(shard_map(gather, mesh=mesh, in_specs=P(all_axes),
+                           out_specs=P(None)))
+    fn(x).block_until_ready()  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_chunk_rows(
+    rows: int,
+    rank: int,
+    mesh,
+    *,
+    all_axes=("group", "sub"),
+    wire_dtype: str | None = None,
+    num_chunks=DEFAULT_NUM_CHUNK_CANDIDATES,
+    repeats: int = 3,
+    force: bool = False,
+) -> int:
+    """Sweep overlap chunk sizes on ``mesh``; return (and cache) the fastest
+    ``chunk_rows`` for ``(rows, rank, devices, wire, backend)``. On a single
+    device the gather is an identity — the default chunking is returned
+    without timing or caching."""
+    m = int(np.prod([mesh.shape[a] for a in all_axes]))
+    if m == 1:
+        return collectives.default_chunk_rows(rows)
+    wire = wire_dtype or "float32"
+    backend = jax.default_backend()
+    key = _cache_key(rows, rank, m, wire, backend)
+    cands = _candidates(rows, num_chunks)
+    grid = {"rows": rows, "chunk_rows": cands, "repeats": repeats}
+
+    if not force:
+        memo = _MEMO.get(key)
+        if memo is not None and memo[0] == grid:
+            return memo[1]
+        disk = ec_autotune._load_cache(ec_autotune.cache_path()).get(key)
+        if disk is not None and disk.get("grid") == grid:
+            winner = int(disk["chunk_rows"])
+            _MEMO[key] = (grid, winner)
+            return winner
+
+    timings: dict[str, float] = {}
+    best, best_t = cands[0], float("inf")
+    for cr in cands:
+        dt = _time_chunk(rows, rank, mesh, all_axes, cr, wire, repeats)
+        timings[f"c{cr}"] = dt
+        if dt < best_t:
+            best_t, best = dt, cr
+
+    _MEMO[key] = (grid, best)
+    path = ec_autotune.cache_path()
+    cache = ec_autotune._load_cache(path)
+    cache["_format"] = ec_autotune.CACHE_FORMAT_VERSION
+    cache[key] = {"chunk_rows": int(best), "grid": grid, "timings": timings}
+    ec_autotune._store_cache(path, cache)
+    return best

@@ -1,0 +1,304 @@
+"""Factor-exchange collectives (paper §4.9, Algorithm 3) — variant registry.
+
+The exchange after each mode update moves the merged output-factor
+partitions between devices. Three gather schedules and two merge schedules
+are interchangeable, all operating *inside* ``shard_map``:
+
+gather (``GATHER_VARIANTS``):
+
+  ``allgather``  XLA's native ``lax.all_gather`` — on TPU this already
+                 lowers to the ICI-native ring/torus schedule.
+  ``ring``       paper-faithful explicit ring built from ``lax.ppermute``
+                 (send to (id+1) mod M, receive from (id-1) mod M, M-1
+                 rounds — exactly Algorithm 3).
+  ``overlap``    chunked, double-buffered ring: the local shard is split
+                 into row-chunks and the rounds are software-pipelined so
+                 chunk k+1's ``ppermute`` is issued *before* chunk k's
+                 received blocks are written into the output buffer. Each
+                 chunk's collectives are independent, so XLA's async
+                 collective scheduler (collective-permute-start/done) can
+                 hide chunk k+1's wire time behind chunk k's consumption —
+                 the scatter into the replicated factor and the leading DMA
+                 of the next mode's EC kernel (the same async-dispatch
+                 pipelining the shard streamer uses host-side).
+
+merge (``MERGE_VARIANTS``, the intra-group reduce for replication r>1):
+
+  ``psum_scatter``  XLA's fused reduce-scatter (``lax.psum_scatter``).
+  ``ring_rs``       explicit ring reduce-scatter from ``ppermute``: each
+                    block's partial travels r-1 hops, every hop adds the
+                    local contribution — the schedule GPUDirect P2P uses.
+
+Mixed-precision wire format: with ``wire_dtype`` set (bf16), payloads are
+cast to the wire dtype *per hop* and accumulated in the input dtype (fp32)
+— halving exchange volume while keeping fp32 merge accumulation. The
+``psum_scatter`` merge cannot split wire and accumulation dtypes (XLA
+reduces in the wire dtype), so a bf16-wire merge always takes the
+``ring_rs`` schedule.
+
+Selection precedence mirrors ``kernels/ops.py``: explicit argument >
+``AMPED_EXCHANGE_VARIANT`` / ``AMPED_EXCHANGE_MERGE`` environment variable
+> default (``ring`` / ``psum_scatter``; the legacy ``ring: bool`` flag maps
+onto ``ring``/``allgather``).
+
+All gather variants are pure data movement and bit-identical; merge
+variants agree to fp32 rounding (the reduction orders differ).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import compat
+
+__all__ = [
+    "GATHER_VARIANTS", "MERGE_VARIANTS", "ENV_VARIANT", "ENV_MERGE",
+    "DEFAULT_VARIANT", "DEFAULT_MERGE", "resolve_variant", "resolve_merge",
+    "axis_size", "ring_all_gather", "overlap_all_gather", "all_gather_axes",
+    "ring_reduce_scatter", "merge_partials", "default_chunk_rows",
+]
+
+GATHER_VARIANTS = ("allgather", "ring", "overlap")
+MERGE_VARIANTS = ("psum_scatter", "ring_rs")
+ENV_VARIANT = "AMPED_EXCHANGE_VARIANT"
+ENV_MERGE = "AMPED_EXCHANGE_MERGE"
+DEFAULT_VARIANT = "ring"
+DEFAULT_MERGE = "psum_scatter"
+
+# Overlap depth when neither config nor the autotuner names a chunk size:
+# split the local shard into this many chunks (capped so a chunk never goes
+# below one row).
+DEFAULT_NUM_CHUNKS = 2
+
+
+def resolve_variant(variant: str | None = None,
+                    ring: bool | None = None) -> str:
+    """Resolve the gather variant (argument > env > legacy flag > default)."""
+    if variant is None:
+        if ring is not None and ENV_VARIANT not in os.environ:
+            return "ring" if ring else "allgather"
+        variant = os.environ.get(ENV_VARIANT, DEFAULT_VARIANT)
+    if variant not in GATHER_VARIANTS:
+        raise ValueError(
+            f"unknown exchange variant {variant!r}; expected one of "
+            f"{sorted(GATHER_VARIANTS)}")
+    return variant
+
+
+def resolve_merge(merge: str | None = None) -> str:
+    """Resolve the merge variant (argument > env > default)."""
+    if merge is None:
+        merge = os.environ.get(ENV_MERGE, DEFAULT_MERGE)
+    if merge not in MERGE_VARIANTS:
+        raise ValueError(
+            f"unknown exchange merge {merge!r}; expected one of "
+            f"{sorted(MERGE_VARIANTS)}")
+    return merge
+
+
+def axis_size(axis_names) -> int:
+    if isinstance(axis_names, str):
+        return compat.axis_size(axis_names)
+    s = 1
+    for a in axis_names:
+        s *= compat.axis_size(a)
+    return s
+
+
+def _to_wire(x: jax.Array, wire_dtype) -> jax.Array:
+    return x if wire_dtype is None else x.astype(wire_dtype)
+
+
+def _from_wire(x: jax.Array, dtype) -> jax.Array:
+    return x if x.dtype == dtype else x.astype(dtype)
+
+
+def default_chunk_rows(rows: int) -> int:
+    """Row-chunk size for the ``overlap`` variant when none is configured."""
+    return max(1, -(-rows // DEFAULT_NUM_CHUNKS))
+
+
+def ring_all_gather(x: jax.Array, axis_names, *,
+                    wire_dtype=None) -> jax.Array:
+    """Algorithm 3: explicit ring all-gather via collective_permute.
+
+    x: (chunk, ...) local shard. Returns (M*chunk, ...) with shard order =
+    linearized device order along ``axis_names`` (same layout as
+    lax.all_gather(..., tiled=True)). With ``wire_dtype`` the payload rides
+    the wire in that dtype (one cast at the source — pure data movement, so
+    per-hop recasting would be a no-op).
+    """
+    m = axis_size(axis_names)
+    if m == 1:
+        return x  # nothing on the wire — no cast either
+    idx = lax.axis_index(axis_names)  # linear index over the product
+    perm = [(i, (i + 1) % m) for i in range(m)]
+    chunk = x.shape[0]
+    wired = _to_wire(x, wire_dtype)
+    out = jnp.zeros((m * chunk,) + x.shape[1:], x.dtype)
+    # The local block also takes the wire round-trip: every device must end
+    # with IDENTICAL (replicated) values for every block, or downstream
+    # consumers silently desynchronize across the mesh.
+    out = lax.dynamic_update_slice_in_dim(
+        out, _from_wire(wired, x.dtype), idx * chunk, axis=0)
+
+    def body(z, carry):
+        buf, recv = carry
+        recv = lax.ppermute(recv, axis_names, perm)
+        src = (idx - z - 1) % m  # chunk originally owned by src
+        buf = lax.dynamic_update_slice_in_dim(
+            buf, _from_wire(recv, x.dtype), src * chunk, axis=0)
+        return buf, recv
+
+    (out, _) = lax.fori_loop(
+        0, m - 1, lambda z, c: body(z, c), (out, wired))
+    return out
+
+
+def _chunk_ring_rounds(chunk: jax.Array, axis_names, m: int, idx,
+                       perm, wire_dtype):
+    """Issue the M-1 unrolled ppermute rounds for one row-chunk. Returns
+    ``[(src_index, block), ...]`` including the local block — the collectives
+    are *issued* here; writing the blocks into the output buffer is the
+    caller's consumption step (so it can be pipelined behind the next
+    chunk's rounds). The local block takes the wire round-trip too — every
+    device must end with identical replicated values for every block."""
+    recv = _to_wire(chunk, wire_dtype)
+    parts = [(idx, _from_wire(recv, chunk.dtype))]
+    for z in range(m - 1):
+        recv = lax.ppermute(recv, axis_names, perm)
+        parts.append(((idx - z - 1) % m, _from_wire(recv, chunk.dtype)))
+    return parts
+
+
+def overlap_all_gather(x: jax.Array, axis_names, *,
+                       chunk_rows: int | None = None,
+                       wire_dtype=None) -> jax.Array:
+    """Chunked, double-buffered ring all-gather (the ``overlap`` variant).
+
+    The local shard's rows are split into ``ceil(rows / chunk_rows)``
+    chunks. Chunk k+1's ring rounds are issued *before* chunk k's received
+    blocks are scattered into the output, so the only data dependency
+    between a chunk's collectives and the previous chunk's consumption is
+    the shared output buffer update — XLA's async collective scheduler is
+    free to overlap the wire time of chunk k+1 with chunk k's writes and
+    with whatever consumes the leading output rows next (the next mode's EC
+    gather). Bit-identical to :func:`ring_all_gather` /
+    ``lax.all_gather(tiled=True)``: identical data, identical layout.
+    """
+    m = axis_size(axis_names)
+    if m == 1:
+        return x  # nothing on the wire — no cast either
+    rows = x.shape[0]
+    if chunk_rows is None:
+        chunk_rows = default_chunk_rows(rows)
+    chunk_rows = max(1, min(int(chunk_rows), rows))
+    idx = lax.axis_index(axis_names)
+    perm = [(i, (i + 1) % m) for i in range(m)]
+    out = jnp.zeros((m * rows,) + x.shape[1:], x.dtype)
+
+    def consume(buf, base, parts):
+        # scatter one chunk's gathered blocks into the replicated output:
+        # block from src lands at rows [src*rows + base, ... + chunk).
+        for src, block in parts:
+            buf = lax.dynamic_update_slice_in_dim(
+                buf, block, src * rows + base, axis=0)
+        return buf
+
+    pending = None  # (base_row, parts) — the double buffer
+    for base in range(0, rows, chunk_rows):
+        chunk = lax.slice_in_dim(
+            x, base, min(base + chunk_rows, rows), axis=0)
+        parts = _chunk_ring_rounds(chunk, axis_names, m, idx, perm,
+                                   wire_dtype)
+        if pending is not None:
+            out = consume(out, *pending)  # consume k while k+1 is in flight
+        pending = (base, parts)
+    out = consume(out, *pending)
+    return out
+
+
+def all_gather_axes(x: jax.Array, axis_names, *, ring: bool | None = None,
+                    variant: str | None = None,
+                    chunk_rows: int | None = None,
+                    wire_dtype=None) -> jax.Array:
+    """Gather shards along ``axis_names`` into the leading dim (tiled),
+    via the resolved gather variant. ``ring`` is the legacy boolean spelling
+    (True → ``ring``, False → ``allgather``) kept for callers predating the
+    variant registry."""
+    variant = resolve_variant(variant, ring)
+    if variant == "ring":
+        return ring_all_gather(x, axis_names, wire_dtype=wire_dtype)
+    if variant == "overlap":
+        return overlap_all_gather(x, axis_names, chunk_rows=chunk_rows,
+                                  wire_dtype=wire_dtype)
+    if axis_size(axis_names) == 1:
+        return x  # nothing on the wire — no cast either
+    out = lax.all_gather(_to_wire(x, wire_dtype), axis_names, axis=0,
+                         tiled=True)
+    return _from_wire(out, x.dtype)
+
+
+def ring_reduce_scatter(x: jax.Array, sub_axis: str, *,
+                        wire_dtype=None) -> jax.Array:
+    """Explicit ring reduce-scatter over ``sub_axis``: member ``s`` ends
+    with rows [s*rows/r, (s+1)*rows/r) summed across the group (the layout
+    of ``lax.psum_scatter(..., tiled=True)``). Each block's partial travels
+    r-1 hops; every hop casts the payload to ``wire_dtype`` for the wire and
+    accumulates in ``x.dtype`` — bf16 wire, fp32 accumulate."""
+    r = compat.axis_size(sub_axis)
+    if r == 1:
+        return x
+    rows = x.shape[0]
+    if rows % r:
+        raise ValueError(
+            f"ring_reduce_scatter: leading dim {rows} is not divisible by "
+            f"the replication factor r={r}; merged row ownership would be "
+            f"corrupted (see core/partition.py rows_max padding)")
+    chunk = rows // r
+    idx = lax.axis_index(sub_axis)
+    perm = [(i, (i + 1) % r) for i in range(r)]
+
+    def block(b):
+        return lax.dynamic_slice_in_dim(x, b * chunk, chunk, axis=0)
+
+    # Block b's partial starts at member b+1 and ends, fully reduced, at
+    # member b after r-1 hops (each receiver adds its local contribution).
+    acc = block((idx - 1) % r)
+    for k in range(1, r):
+        recv = lax.ppermute(_to_wire(acc, wire_dtype), sub_axis, perm)
+        acc = _from_wire(recv, x.dtype) + block((idx - k - 1) % r)
+    return acc
+
+
+def merge_partials(partial: jax.Array, sub_axis: str | None, *,
+                   merge: str | None = None,
+                   wire_dtype=None) -> jax.Array:
+    """Intra-group merge for replication r: reduce-scatter over the ``sub``
+    axis so member ``s`` keeps rows [s*rows/r, (s+1)*rows/r). Identity when
+    r == 1 (the paper's zero-communication case).
+
+    A bf16 wire always takes the ``ring_rs`` schedule — ``psum_scatter``
+    would accumulate in the wire dtype, losing the fp32 merge (see module
+    docstring)."""
+    if sub_axis is None:
+        return partial
+    merge = resolve_merge(merge)
+    r = compat.axis_size(sub_axis)
+    if r == 1:
+        return partial
+    if partial.shape[0] % r:
+        raise ValueError(
+            f"merge_partials: padded row count {partial.shape[0]} is not "
+            f"divisible by the replication factor r={r} — the reduce-"
+            f"scatter would assign fractional row ownership and corrupt "
+            f"the merged factor. Plans built by core/partition.py pad "
+            f"rows_max to a multiple of lcm(tile, r); rebuild the plan "
+            f"instead of hand-crafting the geometry.")
+    if merge == "ring_rs" or wire_dtype is not None:
+        return ring_reduce_scatter(partial, sub_axis, wire_dtype=wire_dtype)
+    return lax.psum_scatter(partial, sub_axis, scatter_dimension=0,
+                            tiled=True)

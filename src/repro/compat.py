@@ -10,7 +10,19 @@ from __future__ import annotations
 import jax
 from jax import lax
 
-__all__ = ["shard_map", "axis_size", "cost_analysis"]
+__all__ = ["shard_map", "axis_size", "cost_analysis", "make_mesh"]
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where the installed
+    jax knows them (>= 0.5); plain ``make_mesh`` on earlier releases (this
+    container's 0.4.37 has neither ``jax.sharding.AxisType`` nor the
+    ``axis_types`` kwarg)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
 
 
 def cost_analysis(compiled) -> dict:

@@ -102,8 +102,13 @@ def make_mode_update(plan: CPPlan, mode: int, mesh: Mesh, **mttkrp_kw) -> Callab
 def make_sweep_updates(plan: CPPlan, mesh: Mesh, **mttkrp_kw) -> list[Callable]:
     """The jitted per-mode update list a multi-sweep caller needs: one
     :func:`make_mode_update` closure per mode, sharing ``mttkrp_kw`` (kernel
-    variant, num_buffers, ring, ...). Build once, pass to every
-    :func:`als_sweep` — this is what :class:`repro.api.CPSolver` owns."""
+    variant, num_buffers, ``exchange_spec`` — the
+    :class:`repro.comm.ExchangeSpec` selecting gather/merge schedule, overlap
+    chunking and wire dtype — or the legacy ``ring`` flag). Build once, pass
+    to every :func:`als_sweep` — this is what :class:`repro.api.CPSolver`
+    owns. With an ``overlap`` exchange spec, each update's tail chunks are
+    still in flight when the next mode's update is enqueued — the same
+    async-dispatch pipelining the shard streamer applies to H2D transfers."""
     return [make_mode_update(plan, d, mesh, **mttkrp_kw)
             for d in range(plan.nmodes)]
 

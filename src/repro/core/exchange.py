@@ -1,82 +1,30 @@
-"""Factor-matrix exchange collectives (paper §4.9, Algorithm 3).
+"""Backwards-compatibility shim over :mod:`repro.comm`.
 
-The paper ring-all-gathers the per-GPU output factor partitions over
-GPUDirect P2P. On TPU, `lax.all_gather` already lowers to the ICI-native
-ring/torus schedule, but we also provide a **paper-faithful explicit ring**
-built from `lax.ppermute` (send to (id+1) mod M, receive from (id-1) mod M,
-M-1 rounds — exactly Algorithm 3) so the two schedules can be compared in
-the dry-run HLO. Both operate inside `shard_map`.
-
-`merge_partials` is the intra-group reduce for replication r>1: the
-generalized scheme (and, with r = m, the paper's Fig. 6 "equal nnz"
-baseline, with the host-CPU merge replaced by an on-device reduce-scatter —
-the TPU-idiomatic equivalent noted in DESIGN.md).
+The factor-exchange collectives (paper §4.9, Algorithm 3) grew into the
+``repro.comm`` subsystem: gather variants (``allgather | ring | overlap``),
+merge variants (``psum_scatter | ring_rs``), the chunked double-buffered
+overlap schedule, the bf16 wire format, the chunk autotuner and the
+exchange-volume accounting all live there. This module keeps the historical
+import surface (``repro.core.exchange.ring_all_gather`` etc.) stable for
+existing callers and tests; new code should import :mod:`repro.comm`.
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence
-
 import jax
-import jax.numpy as jnp
-from jax import lax
 
-from repro import compat
+from repro.comm.collectives import (axis_size, merge_partials,
+                                    ring_all_gather)
+from repro.comm import collectives as _collectives
 
-__all__ = ["ring_all_gather", "all_gather_axes", "merge_partials", "axis_size"]
-
-
-def axis_size(axis_names) -> int:
-    if isinstance(axis_names, str):
-        return compat.axis_size(axis_names)
-    s = 1
-    for a in axis_names:
-        s *= compat.axis_size(a)
-    return s
-
-
-def ring_all_gather(x: jax.Array, axis_names) -> jax.Array:
-    """Algorithm 3: explicit ring all-gather via collective_permute.
-
-    x: (chunk, ...) local shard. Returns (M*chunk, ...) with shard order =
-    linearized device order along ``axis_names`` (same layout as
-    lax.all_gather(..., tiled=True)).
-    """
-    m = axis_size(axis_names)
-    if m == 1:
-        return x
-    idx = lax.axis_index(axis_names)  # linear index over the product
-    perm = [(i, (i + 1) % m) for i in range(m)]
-    chunk = x.shape[0]
-    out = jnp.zeros((m * chunk,) + x.shape[1:], x.dtype)
-    out = lax.dynamic_update_slice_in_dim(out, x, idx * chunk, axis=0)
-
-    def body(z, carry):
-        buf, recv = carry
-        recv = lax.ppermute(recv, axis_names, perm)
-        src = (idx - z - 1) % m  # chunk originally owned by src
-        buf = lax.dynamic_update_slice_in_dim(buf, recv, src * chunk, axis=0)
-        return buf, recv
-
-    (out, _) = lax.fori_loop(
-        0, m - 1, lambda z, c: body(z, c), (out, x))
-    return out
+__all__ = ["ring_all_gather", "all_gather_axes", "merge_partials",
+           "axis_size"]
 
 
 def all_gather_axes(x: jax.Array, axis_names, *, ring: bool = False) -> jax.Array:
-    """Gather shards along ``axis_names`` into the leading dim (tiled)."""
+    """Historical signature, preserved exactly: ``ring`` defaults to False
+    (XLA's native all-gather) and the choice is NOT overridable by the
+    ``AMPED_EXCHANGE_VARIANT`` environment variable — pre-registry callers
+    get pre-registry behavior. New code: :func:`repro.comm.all_gather_axes`."""
     if ring:
-        return ring_all_gather(x, axis_names)
-    return lax.all_gather(x, axis_names, axis=0, tiled=True)
-
-
-def merge_partials(partial: jax.Array, sub_axis: str | None) -> jax.Array:
-    """Intra-group merge for replication r: reduce-scatter over the ``sub``
-    axis so member ``s`` keeps rows [s*rows/r, (s+1)*rows/r). Identity when
-    r == 1 (the paper's zero-communication case)."""
-    if sub_axis is None:
-        return partial
-    r = compat.axis_size(sub_axis)
-    if r == 1:
-        return partial
-    return lax.psum_scatter(partial, sub_axis, scatter_dimension=0, tiled=True)
+        return _collectives.ring_all_gather(x, axis_names)
+    return _collectives.all_gather_axes(x, axis_names, variant="allgather")

@@ -4,10 +4,13 @@ Per output mode ``d``:
   1. every device runs the EC on its shard (Pallas kernel or jnp segments) —
      no cross-device write conflicts by the partitioning invariant,
   2. replication groups (r>1) merge partials with an intra-group
-     reduce-scatter (identity for the paper's r=1),
-  3. the output factor partitions are exchanged with a ring all-gather
-     (Algorithm 3) or XLA's native all-gather, yielding the replicated
-     padded factor for the next mode.
+     reduce-scatter (``psum_scatter`` or the explicit ``ring_rs`` schedule;
+     identity for the paper's r=1),
+  3. the output factor partitions are exchanged via the configured
+     :class:`repro.comm.ExchangeSpec` — XLA's native all-gather, the
+     Algorithm-3 ``ring``, or the chunked double-buffered ``overlap``
+     schedule, optionally on a bf16 wire — yielding the replicated padded
+     factor for the next mode.
 
 Device axes: the CP mesh is (n_groups, r) named ("group", "sub"); on the
 production LM mesh the same code runs with group=("pod","data") and
@@ -24,8 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import comm
 from repro.compat import shard_map
-from repro.core import exchange
 from repro.core.partition import CPPlan, ModePartition
 from repro.kernels import ops as kops
 
@@ -101,7 +104,8 @@ def make_mttkrp_fn(
     variant: str | None = None,
     num_buffers: int = 2,
     interpret: bool | None = None,
-    ring: bool = True,
+    ring: bool | None = None,
+    exchange_spec: comm.ExchangeSpec | None = None,
 ):
     """Build the jit-able distributed MTTKRP for one mode.
 
@@ -110,12 +114,18 @@ def make_mttkrp_fn(
     (one per mode; the output mode's entry is ignored).
 
     ``variant`` selects the EC kernel (``"ref" | "blocked" | "fused"``, see
-    repro.kernels.ops); ``num_buffers`` is the fused variant's DMA ring depth.
+    repro.kernels.ops); ``num_buffers`` is the fused variant's DMA ring
+    depth. ``exchange_spec`` (a :class:`repro.comm.ExchangeSpec`) selects
+    the exchange schedule — gather variant, merge variant, overlap chunk
+    size, wire dtype; ``ring`` is the legacy boolean spelling of the gather
+    variant, honoured only when no spec is given.
     """
     meta = dict(mode=part.mode, rows_max=part.rows_max, tile=part.tile,
                 block_p=part.block_p)
     all_axes = tuple(group_axes) + (sub_axis,)
-    n_in = None  # arity from factors pytree at call time
+    if exchange_spec is None:
+        exchange_spec = comm.ExchangeSpec(
+            variant=comm.resolve_variant(None, ring))
 
     def local_fn(indices, values, local_rows, block_to_tile, tile_visited,
                  *factors):
@@ -129,9 +139,11 @@ def make_mttkrp_fn(
                             tile_visited, list(factors), use_kernel=use_kernel,
                             variant=variant, num_buffers=num_buffers,
                             interpret=interpret)
-        merged = exchange.merge_partials(
-            partial, sub_axis if part.r > 1 else None)
-        out = exchange.all_gather_axes(merged, all_axes, ring=ring)
+        merged = comm.merge_partials(
+            partial, sub_axis if part.r > 1 else None,
+            **exchange_spec.merge_kwargs())
+        out = comm.all_gather_axes(merged, all_axes,
+                                   **exchange_spec.gather_kwargs())
         return out
 
     shard_spec = P(group_axes, sub_axis)

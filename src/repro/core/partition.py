@@ -53,6 +53,7 @@ __all__ = [
     "build_plan",
     "block_device_rows",
     "auto_replication",
+    "validate_plan",
     "Strategy",
 ]
 
@@ -268,6 +269,14 @@ def partition_mode(
     max_rows_owned = int(np.bincount(owner, minlength=n_groups).max()) if owner.size else 0
     unit = _lcm(tile, r)
     rows_max = max(unit, -(-max(max_rows_owned, 1) // unit) * unit)
+    if rows_max % r:
+        # Unreachable through the lcm padding above, but the invariant is
+        # load-bearing for the exchange: a non-divisible rows_max would make
+        # the intra-group reduce-scatter assign fractional row ownership.
+        raise ValueError(
+            f"mode {mode}: padded row count rows_max={rows_max} is not "
+            f"divisible by replication r={r}; the intra-group merge would "
+            f"corrupt row ownership")
     g2p, p2g, rows_owned = _layout_rows(owner, n_groups, rows_max)
 
     # --- per-nonzero placement -------------------------------------------
@@ -368,6 +377,31 @@ def partition_mode(
     return part, g2p, p2g
 
 
+def validate_plan(plan: CPPlan) -> CPPlan:
+    """Check the invariants the exchange relies on; raise a clear
+    ``ValueError`` at plan time rather than corrupting factors at sweep
+    time. Today's load-bearing invariant: every mode's padded row count
+    must split evenly across its replication group (``rows_max % r == 0``),
+    or the intra-group reduce-scatter (``comm.merge_partials``) would hand
+    each member a fractional row range. Returns ``plan`` unchanged so it
+    composes as a pass-through (``api.plan`` runs it on built *and* cache-
+    loaded plans — a hand-edited or stale plan artifact fails loudly)."""
+    for part in plan.modes:
+        if part.r > 0 and part.rows_max % part.r:
+            raise ValueError(
+                f"invalid plan: mode {part.mode} has rows_max="
+                f"{part.rows_max} not divisible by replication r={part.r}; "
+                f"the intra-group merge would corrupt row ownership. "
+                f"Rebuild the plan (core/partition.py pads rows_max to a "
+                f"multiple of lcm(tile, r)).")
+        if part.num_devices != part.n_groups * part.r:
+            raise ValueError(
+                f"invalid plan: mode {part.mode} device grid "
+                f"{part.n_groups}x{part.r} does not cover "
+                f"num_devices={part.num_devices}")
+    return plan
+
+
 def build_plan(
     t: SparseTensor,
     num_devices: int,
@@ -404,11 +438,11 @@ def build_plan(
             t, d, num_devices, strategy=strategy, replication=replication,
             tile=tile, block_p=block_p, all_g2p=g2ps)
         parts.append(part)
-    return CPPlan(
+    return validate_plan(CPPlan(
         shape=t.shape,
         num_devices=num_devices,
         modes=tuple(parts),
         global_to_padded=tuple(g.astype(np.int32) for g in g2ps),
         padded_to_global=tuple(p.astype(np.int32) for p in metas),
         norm=t.norm(),
-    )
+    ))

@@ -8,18 +8,29 @@ backend, not on the particular tensor: the kernel streams fixed-size
 (block_p, R) slabs whatever the sparsity pattern. So the tuner times each
 candidate on a small *representative shard* (a synthetic zipf tensor run
 through the real partitioner) and caches the winner per
-``(nmodes, rank, backend, variant)``.
+``(nmodes, rank, dtype, backend, variant)``.
 
-Cache format (JSON, see EXPERIMENTS.md §Autotuner):
+Cache format v2 (JSON, see EXPERIMENTS.md §Autotuner):
 
-    {"<nmodes>m_r<rank>_<backend>_<variant>":
+    {"_format": 2,
+     "<nmodes>m_r<rank>_<dtype>_<backend>_<variant>":
         {"tile": 8, "block_p": 128, "num_buffers": 2,
          "grid": {"nnz": 4096, "tiles": [8, 16], ...},
          "timings": {"t8_p128_b2": 0.0012, ...}}}
 
+The factor dtype is part of the key: a bf16 sweep and an fp32 sweep (or
+different ranks) must never replay each other's tile/block_p winners —
+the v1 format keyed only ``(nmodes, rank, backend, variant)``, so mixed-
+precision sweeps collided on one entry. Loading a v1 cache migrates its
+entries in place (v1 winners were always timed at fp32, so they re-key to
+``float32``); unrecognizable entries are dropped.
+
 An entry is only reused when its ``grid`` matches the requested sweep —
 asking for a different candidate grid re-tunes instead of silently
 returning a winner from a grid that never contained your candidates.
+
+The same file also stores the exchange chunk-size winners of
+:mod:`repro.comm.autotune` under ``xchg_...`` keys.
 
 Default location ``~/.cache/amped/autotune.json``; override with the
 ``AMPED_AUTOTUNE_CACHE`` environment variable (empty string disables the
@@ -30,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import re
 import time
 
 import jax
@@ -39,13 +51,20 @@ import numpy as np
 from repro.kernels import ops as kops
 
 __all__ = ["ECConfig", "autotune_ec", "cache_path", "representative_shard",
-           "DEFAULT_TILES", "DEFAULT_BLOCK_PS", "DEFAULT_NUM_BUFFERS"]
+           "CACHE_FORMAT_VERSION", "DEFAULT_TILES", "DEFAULT_BLOCK_PS",
+           "DEFAULT_NUM_BUFFERS"]
 
 ENV_CACHE = "AMPED_AUTOTUNE_CACHE"
+CACHE_FORMAT_VERSION = 2  # v2: factor dtype in the entry key
 
 DEFAULT_TILES = (8, 16)
 DEFAULT_BLOCK_PS = (64, 128)
 DEFAULT_NUM_BUFFERS = (2, 3)
+
+# v1 entry key: "<nmodes>m_r<rank>_<backend>_<variant>" (no dtype slot);
+# v2 adds a dtype segment between rank and backend (5 segments total).
+_V1_KEY_RE = re.compile(r"^(\d+m_r\d+)_([a-z]+)_(ref|blocked|fused)$")
+_V2_KEY_RE = re.compile(r"^\d+m_r\d+_[a-z]+\d+_[a-z]+_(ref|blocked|fused)$")
 
 _MEMO: dict[str, tuple[dict, "ECConfig"]] = {}  # key -> (grid, winner)
 
@@ -65,17 +84,45 @@ def cache_path() -> str | None:
     return p or os.path.expanduser("~/.cache/amped/autotune.json")
 
 
-def _cache_key(nmodes: int, rank: int, backend: str, variant: str) -> str:
-    return f"{nmodes}m_r{rank}_{backend}_{variant}"
+def _dtype_tag(dtype) -> str:
+    return np.dtype(dtype).name  # "float32", "bfloat16", ...
+
+
+def _cache_key(nmodes: int, rank: int, backend: str, variant: str,
+               dtype=jnp.float32) -> str:
+    return f"{nmodes}m_r{rank}_{_dtype_tag(dtype)}_{backend}_{variant}"
+
+
+def _migrate_v1(cache: dict) -> dict:
+    """Re-key a v1 cache: v1 winners were always timed with fp32 factors,
+    so ``3m_r8_cpu_fused`` becomes ``3m_r8_float32_cpu_fused``. Keys
+    already in v2 form (or ``xchg_...`` exchange entries) pass through
+    unchanged — the migration is idempotent; keys matching neither format
+    are stale and dropped rather than replayed."""
+    out: dict = {"_format": CACHE_FORMAT_VERSION}
+    for key, entry in cache.items():
+        if key.startswith("_"):
+            continue
+        if key.startswith("xchg_") or _V2_KEY_RE.match(key):
+            out[key] = entry
+            continue
+        m = _V1_KEY_RE.match(key)
+        if m:
+            out[f"{m.group(1)}_float32_{m.group(2)}_{m.group(3)}"] = entry
+    return out
 
 
 def _load_cache(path: str | None) -> dict:
     if path and os.path.exists(path):
         try:
             with open(path) as f:
-                return json.load(f)
+                cache = json.load(f)
         except (OSError, json.JSONDecodeError):
-            pass
+            return {}
+        if cache.get("_format") != CACHE_FORMAT_VERSION:
+            cache = _migrate_v1(cache)
+            _store_cache(path, cache)  # persist once; later loads are v2
+        return cache
     return {}
 
 
@@ -109,9 +156,10 @@ def representative_shard(nmodes: int, nnz: int, tile: int | None = None,
 
 
 def _time_candidate(t, part, rank: int, variant: str, num_buffers: int,
-                    interpret: bool, repeats: int, seed: int = 0) -> float:
+                    interpret: bool, repeats: int, seed: int = 0,
+                    dtype=jnp.float32) -> float:
     rng = np.random.default_rng(seed)
-    factors = [jnp.asarray(rng.normal(size=(s, rank)).astype(np.float32))
+    factors = [jnp.asarray(rng.normal(size=(s, rank))).astype(dtype)
                for s in t.shape]
     args = (jnp.asarray(part.indices[0]), jnp.asarray(part.values[0]),
             jnp.asarray(part.local_rows[0]),
@@ -147,9 +195,13 @@ def autotune_ec(
     repeats: int = 3,
     interpret: bool | None = None,
     force: bool = False,
+    dtype=jnp.float32,
 ) -> ECConfig:
     """Sweep the candidate grid on a representative shard; return (and
-    cache) the fastest ``ECConfig`` for ``(nmodes, rank, backend, variant)``.
+    cache) the fastest ``ECConfig`` for
+    ``(nmodes, rank, dtype, backend, variant)``. ``dtype`` is the factor
+    dtype the candidates are timed with — part of the cache key, so fp32
+    and bf16 sweeps never replay each other's winners.
 
     Variants without a DMA ring (``ref``, ``blocked``) collapse the
     ``num_buffers`` axis.
@@ -160,7 +212,7 @@ def autotune_ec(
         interpret = kops.default_interpret()
     if variant != "fused":
         num_buffers_grid = (2,)  # no DMA ring: the axis is meaningless
-    key = _cache_key(nmodes, rank, backend, variant)
+    key = _cache_key(nmodes, rank, backend, variant, dtype)
     # A cached winner is only valid for the grid that produced it.
     grid = {"nnz": nnz, "tiles": list(tiles), "block_ps": list(block_ps),
             "num_buffers_grid": list(num_buffers_grid)}
@@ -184,7 +236,7 @@ def autotune_ec(
             t, part = representative_shard(nmodes, nnz, tile, block_p)
             for nb in num_buffers_grid:
                 dt = _time_candidate(t, part, rank, variant, nb,
-                                     interpret, repeats)
+                                     interpret, repeats, dtype=dtype)
                 timings[f"t{tile}_p{block_p}_b{nb}"] = dt
                 if dt < best_t:
                     best_t, best = dt, (tile, block_p, nb)
@@ -194,6 +246,7 @@ def autotune_ec(
     _MEMO[key] = (grid, best_cfg)
     path = cache_path()
     cache = _load_cache(path)
+    cache["_format"] = CACHE_FORMAT_VERSION
     cache[key] = {"tile": best_cfg.tile, "block_p": best_cfg.block_p,
                   "num_buffers": best_cfg.num_buffers, "grid": grid,
                   "timings": timings}

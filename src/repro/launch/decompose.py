@@ -15,7 +15,13 @@ to pay preprocessing once across invocations. With --rebalance (or
 --measure-balance) it also prints the scheduler's imbalance report:
 per-mode measured vs cost-model-predicted max/mean EC-time ratios, the
 calibrated coefficients, and every rebalance event (sweep, migrations,
-nonzeros moved).
+nonzeros moved). With --exchange-report it prints the exchange subsystem's
+volume accounting: per-sweep modelled exchange bytes (ring formulas, §4.9)
+against bytes measured from the compiled HLO's collectives, e.g.::
+
+    PYTHONPATH=src python -m repro.launch.decompose --preset paper \
+        --set exchange.variant=overlap --set exchange.wire_dtype=bfloat16 \
+        --exchange-report
 """
 from __future__ import annotations
 
@@ -51,6 +57,9 @@ def main():
                     help="collect per-device EC-time telemetry and report "
                          "imbalance without migrating "
                          "(schedule.rebalance=measure)")
+    ap.add_argument("--exchange-report", action="store_true",
+                    help="print per-sweep modelled vs HLO-measured exchange "
+                         "volume for the resolved exchange spec")
     args = ap.parse_args()
 
     import repro.api as api
@@ -72,7 +81,9 @@ def main():
           f"preset={args.preset} rank={cfg.rank} "
           f"variant={cfg.kernel.resolved_variant()} "
           f"policy={cfg.resolved_policy()} "
-          f"rebalance={cfg.schedule.rebalance}")
+          f"rebalance={cfg.schedule.rebalance} "
+          f"exchange={cfg.exchange.resolved_variant()}"
+          f"/{cfg.exchange.wire_dtype}")
 
     t0 = time.time()
     plan = api.plan(t, cfg, cache_dir=args.plan_cache)
@@ -107,6 +118,31 @@ def main():
                     f"{ev['migrations']} migration(s), "
                     f"{ev['moved_nnz']} nnz moved")
             print(line)
+
+    if args.exchange_report:
+        xr = solver.exchange_report()
+        spec, model = xr["spec"], xr["modelled"]
+        meas = xr["measured"]
+        print(f"exchange: {spec['variant']} gather / {spec['merge']} merge "
+              f"| wire {spec['wire_dtype']}"
+              + (f" | chunk_rows {spec['chunk_rows']}"
+                 if spec["chunk_rows"] else ""))
+        import jax
+        if spec["wire_dtype"] != "float32" and \
+                jax.default_backend() != "tpu":
+            print("  note: this backend upcasts reduced-precision "
+                  "collectives to f32 in the compiled HLO (values are "
+                  "still wire-rounded); measured bytes reflect that — "
+                  "expect measured ≈ 2× modelled off-TPU")
+        print(f"  per-sweep volume/device: modelled "
+              f"{model['sweep_total_bytes'] / 1e6:.3f} MB | measured (HLO) "
+              f"{meas['sweep_total_bytes'] / 1e6:.3f} MB")
+        for mode, row in enumerate(model["per_mode"]):
+            m_meas = meas["per_mode"][mode]["total_bytes"]
+            print(f"  mode {mode}: modelled {row['total_bytes']} B "
+                  f"(gather {row['gather_bytes']} + merge "
+                  f"{row['merge_bytes']}) | measured {m_meas:.0f} B")
+    solver.close()
 
 
 if __name__ == "__main__":

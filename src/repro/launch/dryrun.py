@@ -115,8 +115,9 @@ def _mem_dict(mem) -> dict:
 
 def run_cp_cell(*, multi_pod: bool, profile: str = "amazon",
                 replication: int = 1, use_kernel: bool = False,
-                ring: bool = True, save: bool = True,
-                config=None) -> dict:
+                ring: bool = True, exchange_variant: str | None = None,
+                wire_dtype: str = "float32", chunk_rows: int | None = None,
+                save: bool = True, config=None) -> dict:
     """Dry-run of the paper's own workload: one distributed MTTKRP mode step
     (EC + exchange) on the production chips at billion-scale shapes.
 
@@ -124,13 +125,34 @@ def run_cp_cell(*, multi_pod: bool, profile: str = "amazon",
     kwargs: replication/kernel/exchange settings are read off its sections
     (``replication=None`` in the config means auto — the dry run needs a
     concrete mesh factor, so it falls back to the ``replication`` kwarg).
+    ``exchange_variant``/``wire_dtype``/``chunk_rows`` pick the exchange
+    schedule directly (see :mod:`repro.comm`); :func:`run_cp_exchange_ab`
+    compares the blocking and overlap schedules' HLO side by side.
     """
     from types import SimpleNamespace
+
+    from repro import comm
 
     if config is not None:
         if config.partition.replication is not None:
             replication = config.partition.replication
-        ring = config.exchange.ring
+        spec = comm.resolve_exchange_spec(config.exchange)
+        # Explicit CLI exchange flags beat the preset's exchange section —
+        # a user asking --cp-preset paper --cp-exchange overlap gets the
+        # paper config with the overlap schedule, not a silent ignore.
+        if exchange_variant is not None:
+            spec = dataclasses.replace(spec, variant=exchange_variant)
+        if chunk_rows is not None:
+            spec = dataclasses.replace(spec, chunk_rows=chunk_rows)
+        if wire_dtype != "float32":
+            spec = dataclasses.replace(spec, wire_dtype=wire_dtype,
+                                       merge="ring_rs")
+    else:
+        spec = comm.ExchangeSpec(
+            variant=comm.resolve_variant(exchange_variant, ring),
+            merge="ring_rs" if wire_dtype != "float32" else
+            comm.resolve_merge(None),
+            chunk_rows=chunk_rows, wire_dtype=wire_dtype)
 
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -173,7 +195,7 @@ def run_cp_cell(*, multi_pod: bool, profile: str = "amazon",
         tile_visited=st((g, r, rows_max // tile), jnp.float32),
     )
     factors = [st((padded[w], rank), jnp.float32) for w in range(n)]
-    fn = dm.make_mttkrp_fn(part, mesh, ring=ring, **kernel_kw)
+    fn = dm.make_mttkrp_fn(part, mesh, exchange_spec=spec, **kernel_kw)
 
     sh = lambda *spec: NamedSharding(mesh, P(*spec))
     dev_in = dm.DeviceArrays(
@@ -185,8 +207,12 @@ def run_cp_cell(*, multi_pod: bool, profile: str = "amazon",
     )
     f_in = [sh(None, None) for _ in range(n)]
 
-    rec = {"arch": f"cp_{profile}", "cell": f"mttkrp_r{r}" + ("_ring" if ring else "_ag"),
+    xtag = spec.variant + ("" if not spec.reduced_wire else "_bf16w")
+    rec = {"arch": f"cp_{profile}", "cell": f"mttkrp_r{r}_{xtag}",
            "mesh": list(mesh.devices.shape), "multi_pod": multi_pod,
+           "exchange": {"variant": spec.variant, "merge": spec.merge,
+                        "chunk_rows": spec.chunk_rows,
+                        "wire_dtype": spec.wire_dtype},
            "meta": {"arch": f"cp_{profile}", "cell": f"mttkrp_r{r}",
                     "nnz": prof.nnz, "rank": rank, "nnz_per_dev": nnz_dev,
                     "rows_max": rows_max}}
@@ -216,7 +242,47 @@ def run_cp_cell(*, multi_pod: bool, profile: str = "amazon",
         tag = "pod2" if multi_pod else "pod1"
         kern = "_kern" if use_kernel else ""
         path = os.path.join(
-            OUT_DIR, f"cp_{profile}__r{r}{kern}__{tag}.json")
+            OUT_DIR, f"cp_{profile}__r{r}{kern}_{xtag}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def run_cp_exchange_ab(*, multi_pod: bool, profile: str = "amazon",
+                       replication: int = 1, use_kernel: bool = False,
+                       wire_dtype: str = "float32",
+                       save: bool = True) -> dict:
+    """HLO comparison of the exchange schedules: compile the same MTTKRP
+    mode step under the blocking ring and the chunked ``overlap`` schedule
+    (same wire dtype) and put their per-device collective bytes, collective
+    op mix and roofline exchange terms side by side — the machine-readable
+    answer to "what did chunking do to the lowered schedule"."""
+    cells = {}
+    for variant in ("ring", "overlap"):
+        cells[variant] = run_cp_cell(
+            multi_pod=multi_pod, profile=profile, replication=replication,
+            use_kernel=use_kernel, exchange_variant=variant,
+            wire_dtype=wire_dtype, save=False)
+    rec = {"arch": f"cp_{profile}", "cell": "exchange_ab",
+           "multi_pod": multi_pod, "wire_dtype": wire_dtype,
+           "variants": cells}
+    ok = all(c.get("ok") for c in cells.values())
+    rec["ok"] = ok
+    if ok:
+        rec["collective_bytes"] = {
+            v: sum(c["collectives"].values()) for v, c in cells.items()}
+        rec["t_collective"] = {
+            v: c["roofline"]["t_collective"] for v, c in cells.items()}
+        # chunking must not change how many bytes ride the wire — only when
+        # they move relative to compute
+        a, b = (rec["collective_bytes"][v] for v in ("ring", "overlap"))
+        rec["same_volume"] = bool(a > 0 and abs(a - b) <= 0.05 * a)
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        tag = "pod2" if multi_pod else "pod1"
+        wtag = "_bf16w" if wire_dtype != "float32" else ""
+        path = os.path.join(
+            OUT_DIR, f"cp_{profile}__exchange_ab{wtag}__{tag}.json")
         with open(path, "w") as f:
             json.dump(rec, f, indent=1, default=str)
     return rec
@@ -236,6 +302,16 @@ def main():
     ap.add_argument("--cp-preset", default=None,
                     help="repro.api preset (paper|optimized|fused) driving "
                          "the CP cell's kernel/exchange/replication settings")
+    ap.add_argument("--cp-exchange", default=None,
+                    choices=["allgather", "ring", "overlap"],
+                    help="exchange gather variant for the CP cell")
+    ap.add_argument("--cp-wire", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="exchange wire dtype for the CP cell")
+    ap.add_argument("--cp-exchange-ab", action="store_true",
+                    help="compile the CP cell under both the blocking ring "
+                         "and the overlap schedule; record the HLO "
+                         "comparison (collective bytes/mix per variant)")
     ap.add_argument("--kv-layout", default="auto")
     ap.add_argument("--moe-dispatch", default=None)
     ap.add_argument("--tag-extra", default="")
@@ -248,9 +324,18 @@ def main():
             from repro.api import preset
             cfg = preset(args.cp_preset)
         for mp in meshes:
+            if args.cp_exchange_ab:
+                rec = run_cp_exchange_ab(
+                    multi_pod=mp, profile=args.cp_profile,
+                    replication=args.cp_replication,
+                    use_kernel=args.cp_kernel, wire_dtype=args.cp_wire)
+                _report_ab(rec)
+                continue
             rec = run_cp_cell(multi_pod=mp, profile=args.cp_profile,
                               replication=args.cp_replication,
-                              use_kernel=args.cp_kernel, config=cfg)
+                              use_kernel=args.cp_kernel,
+                              exchange_variant=args.cp_exchange,
+                              wire_dtype=args.cp_wire, config=cfg)
             _report(rec)
         return
 
@@ -271,6 +356,19 @@ def main():
                 _report(rec)
     if failures:
         raise SystemExit(f"{failures} cells failed")
+
+
+def _report_ab(rec: dict):
+    if not rec["ok"]:
+        bad = {v: c.get("error") for v, c in rec["variants"].items()
+               if not c.get("ok")}
+        print(f"FAIL {rec['arch']:<22} exchange_ab    {bad}", flush=True)
+        return
+    cb, tc = rec["collective_bytes"], rec["t_collective"]
+    print(f"OK   {rec['arch']:<22} exchange_ab    wire={rec['wire_dtype']:<9}"
+          f"ring {cb['ring']/1e6:8.2f}MB/{tc['ring']*1e3:.2f}ms vs overlap "
+          f"{cb['overlap']/1e6:8.2f}MB/{tc['overlap']*1e3:.2f}ms "
+          f"same_volume={rec['same_volume']}", flush=True)
 
 
 def _report(rec: dict):

@@ -7,7 +7,7 @@ init; tests and benches see the real (single) device.
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 __all__ = ["make_production_mesh", "make_cp_production_mesh"]
 
@@ -17,9 +17,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     for 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_cp_production_mesh(*, multi_pod: bool = False, replication: int = 16):
@@ -28,6 +26,5 @@ def make_cp_production_mesh(*, multi_pod: bool = False, replication: int = 16):
     Total devices match the production mesh (256 / 512)."""
     total = 512 if multi_pod else 256
     assert total % replication == 0
-    return jax.make_mesh(
-        (total // replication, replication), ("group", "sub"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh(
+        (total // replication, replication), ("group", "sub"))

@@ -16,8 +16,15 @@ LRU over resident modes.
 
 The dynamic rebalancer (:mod:`repro.schedule.rebalance`) swaps migrated
 modes in-place via :meth:`update_plan`: the stale shards are dropped and the
-migrated modes' new shards prefetched in the background, so the sweep after
-a rebalance point pays no synchronous re-placement.
+migrated modes' new shards prefetched in the background (pending prefetches
+against the outgoing plan are cancelled first), so the sweep after a
+rebalance point pays no synchronous re-placement.
+
+A streamer owns a background executor and must be shut down:
+:meth:`close` cancels queued prefetches, joins any in-flight one (so no
+background ``device_put`` outlives the streamer and touches a freed plan),
+and releases all shard references. ``ShardStreamer`` is a context manager;
+:class:`repro.api.CPSolver` forwards its own ``close()`` here.
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ class ShardStreamer:
         self._pending: OrderedDict[int, Future] = OrderedDict()
         self._pool = ThreadPoolExecutor(max_workers=1,
                                         thread_name_prefix="shard-prefetch")
+        self._closed = False
 
     def _build(self, mode: int) -> DeviceArrays:
         return shard_plan_mode(self.plan.modes[mode], self.mesh,
@@ -53,6 +61,8 @@ class ShardStreamer:
 
     def _dispatch(self, mode: int) -> None:
         """Start moving ``mode``'s shards to device without blocking."""
+        if self._closed:
+            raise RuntimeError("ShardStreamer is closed")
         if mode in self._resident or mode in self._pending:
             return
         self._pending[mode] = self._pool.submit(self._build, mode)
@@ -84,6 +94,8 @@ class ShardStreamer:
     def get(self, mode: int) -> DeviceArrays:
         """Shards for ``mode``; dispatches an async prefetch of
         ``(mode+1) % nmodes`` before returning."""
+        if self._closed:
+            raise RuntimeError("ShardStreamer is closed")
         cur = self._wait(mode)
         nxt = (mode + 1) % self.plan.nmodes
         if self.prefetch > 0 and nxt != mode:
@@ -95,18 +107,51 @@ class ShardStreamer:
                     modes: Iterable[int] | None = None) -> None:
         """Swap in a rebalanced plan: drop the listed modes' stale shards
         (all modes when None) and prefetch their replacements in the
-        background. Array shapes are unchanged by construction
+        background. Pending prefetches of stale modes are cancelled — or,
+        when already executing against the outgoing plan, settled and
+        discarded — before the plan pointer moves, so no background build
+        mixes the two plans. Array shapes are unchanged by construction
         (schedule.rebalance migrates within padding headroom), so consumers'
         jitted functions stay valid."""
         stale = set(range(self.plan.nmodes) if modes is None else modes)
-        self.plan = plan
         for mode in stale:
-            fut = self._pending.pop(mode, None)
-            if fut is not None:
-                fut.cancel() or fut.result()  # settle, then drop
+            self._settle(mode)
             self._resident.pop(mode, None)
+        self.plan = plan
         for mode in sorted(stale):
             if len(self._resident) + len(self._pending) >= self.prefetch + 1:
                 break  # respect the residency bound; the rest load on demand
             self._dispatch(mode)
         self._evict()
+
+    def _settle(self, mode: int) -> None:
+        """Cancel ``mode``'s pending prefetch, waiting it out when it is
+        already running (its result is dropped either way)."""
+        fut = self._pending.pop(mode, None)
+        if fut is None:
+            return
+        if not fut.cancel():
+            try:
+                fut.result()
+            except Exception:  # noqa: BLE001 — a dying prefetch stays dead
+                pass
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        """Shut down the prefetch executor: cancel queued futures, join the
+        in-flight one, drop every shard reference. Idempotent. After close,
+        :meth:`get` raises ``RuntimeError`` — a consumer outliving its
+        streamer is a bug, not a silent synchronous reload."""
+        if self._closed:
+            return
+        self._closed = True
+        for mode in list(self._pending):
+            self._settle(mode)
+        self._pool.shutdown(wait=True)
+        self._resident.clear()
+
+    def __enter__(self) -> "ShardStreamer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

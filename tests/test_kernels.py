@@ -266,3 +266,76 @@ def test_autotune_smoke(tmp_path, monkeypatch):
     # a different candidate grid must NOT reuse the cached winner
     cfg3 = at.autotune_ec(3, 8, **{**kw, "tiles": (16,)})
     assert cfg3.tile == 16
+
+
+def test_autotune_cache_key_dtype_and_rank(tmp_path, monkeypatch):
+    """Regression: the v1 cache keyed only (nmodes, rank, backend, variant),
+    so an fp32 and a bf16 sweep — and, in a key missing rank, different R —
+    collided on one entry and replayed each other's tile/block_p winners.
+    The v2 key carries both; distinct (dtype, rank) points must produce
+    distinct cache entries."""
+    import json
+
+    import jax.numpy as jnp
+
+    from repro.kernels import autotune as at
+
+    path = tmp_path / "cache.json"
+    monkeypatch.setenv(at.ENV_CACHE, str(path))
+    at._MEMO.clear()
+    kw = dict(variant="ref", nnz=256, tiles=(8,), block_ps=(64,),
+              num_buffers_grid=(2,), repeats=1)
+    at.autotune_ec(3, 8, dtype=jnp.float32, **kw)
+    at.autotune_ec(3, 8, dtype=jnp.bfloat16, **kw)
+    at.autotune_ec(3, 16, dtype=jnp.float32, **kw)
+    cache = json.loads(path.read_text())
+    entries = {k for k in cache if not k.startswith("_")}
+    assert cache["_format"] == at.CACHE_FORMAT_VERSION
+    assert len(entries) == 3, entries  # no collisions
+    backend = __import__("jax").default_backend()
+    assert f"3m_r8_float32_{backend}_ref" in entries
+    assert f"3m_r8_bfloat16_{backend}_ref" in entries
+    assert f"3m_r16_float32_{backend}_ref" in entries
+
+
+def test_autotune_cache_v1_migration(tmp_path, monkeypatch):
+    """Loading a v1 cache re-keys its (fp32-timed) entries to the dtype-
+    qualified v2 form, drops unrecognizable keys, and persists the migrated
+    file; a bf16 request then MISSES the migrated fp32 entry (the collision
+    the bugfix removes) while an fp32 request with the same grid hits it."""
+    import json
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import autotune as at
+
+    backend = jax.default_backend()
+    grid = {"nnz": 256, "tiles": [8], "block_ps": [64],
+            "num_buffers_grid": [2]}
+    v1 = {
+        f"3m_r8_{backend}_ref": {"tile": 8, "block_p": 64, "num_buffers": 2,
+                                 "grid": grid, "timings": {"t8_p64_b2": 1.0}},
+        "garbage key": {"tile": 1},
+    }
+    path = tmp_path / "cache.json"
+    path.write_text(json.dumps(v1))
+    monkeypatch.setenv(at.ENV_CACHE, str(path))
+
+    at._MEMO.clear()
+    loaded = at._load_cache(str(path))
+    assert loaded["_format"] == at.CACHE_FORMAT_VERSION
+    assert f"3m_r8_float32_{backend}_ref" in loaded
+    assert "garbage key" not in loaded
+    on_disk = json.loads(path.read_text())  # migration persisted
+    assert on_disk.get("_format") == at.CACHE_FORMAT_VERSION
+    # idempotent: migrating a migrated cache changes nothing
+    assert at._migrate_v1(on_disk) == {k: v for k, v in on_disk.items()}
+
+    kw = dict(variant="ref", nnz=256, tiles=(8,), block_ps=(64,),
+              num_buffers_grid=(2,), repeats=1)
+    hit = at.autotune_ec(3, 8, dtype=jnp.float32, **kw)
+    assert dict(hit.timings) == {"t8_p64_b2": 1.0}  # served from migration
+    at._MEMO.clear()
+    miss = at.autotune_ec(3, 8, dtype=jnp.bfloat16, **kw)
+    assert dict(miss.timings) != {"t8_p64_b2": 1.0}  # re-tuned, no replay

@@ -144,3 +144,39 @@ def test_padded_to_global_inverse(small_tensor):
         assert (p2g[g2p[idx]] == idx).all()
         pad_rows = p2g < 0
         assert pad_rows.sum() == p2g.size - idx.size
+
+
+def test_validate_plan_rejects_nondivisible_rows(small_tensor):
+    """Regression: a plan whose padded row count does not split evenly
+    across the replication group used to flow straight into the intra-group
+    reduce-scatter and silently corrupt row ownership. It must now fail at
+    plan time with a clear ValueError — both from validate_plan directly
+    and from api.compile on a hand-altered/stale plan artifact."""
+    import dataclasses
+
+    import repro.api as api
+    from repro.core.partition import validate_plan
+
+    plan = build_plan(small_tensor, 2, replication=2)
+    assert validate_plan(plan) is plan  # a healthy plan passes through
+
+    part0 = plan.modes[0]
+    assert part0.r == 2
+    bad_part = dataclasses.replace(part0, rows_max=part0.rows_max + 1)
+    bad_plan = dataclasses.replace(plan, modes=(bad_part,) + plan.modes[1:])
+    with pytest.raises(ValueError, match="not divisible by replication"):
+        validate_plan(bad_plan)
+    with pytest.raises(ValueError, match="not divisible by replication"):
+        api.compile(bad_plan, api.paper({"rank": 4}))
+
+
+def test_validate_plan_rejects_inconsistent_device_grid(small_tensor):
+    import dataclasses
+
+    from repro.core.partition import validate_plan
+
+    plan = build_plan(small_tensor, 2, replication=2)
+    bad_part = dataclasses.replace(plan.modes[0], n_groups=2)  # 2*2 != 2
+    bad_plan = dataclasses.replace(plan, modes=(bad_part,) + plan.modes[1:])
+    with pytest.raises(ValueError, match="device grid"):
+        validate_plan(bad_plan)

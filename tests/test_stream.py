@@ -112,3 +112,104 @@ def test_update_plan_swaps_migrated_modes(plan4, mesh, small_tensor_4mode):
     np.testing.assert_array_equal(np.asarray(after[1].values),
                                   plan_b.modes[1].values.reshape(
                                       after[1].values.shape))
+
+
+def test_close_shuts_down_executor_and_cancels_pending(plan4, mesh):
+    """Regression: the streamer never shut down its ThreadPoolExecutor —
+    in-flight prefetch futures leaked past solver teardown and could touch
+    freed plan state. close() must cancel queued work, join the in-flight
+    build, and leave the streamer unusable."""
+    import threading
+
+    release = threading.Event()
+    s = _streamer(plan4, mesh, prefetch=2)
+    orig = s._build
+
+    def slow_build(mode, _orig=orig):
+        if mode != 0:
+            assert release.wait(timeout=10)
+        return _orig(mode)
+
+    s._build = slow_build
+    s.get(0)                      # dispatches mode 1 (blocked in executor)
+    s._dispatch(2)                # queued behind mode 1 → cancellable
+    release.set()
+    s.close()
+    assert not s._pending and not s._resident
+    assert s._pool._shutdown      # executor joined, thread gone
+    with pytest.raises(RuntimeError, match="closed"):
+        s.get(0)
+    s.close()                     # idempotent
+
+
+def test_close_joins_inflight_build(plan4, mesh):
+    """close() must WAIT for a prefetch that is already executing — a
+    background device_put racing teardown is exactly the leak."""
+    import threading
+
+    started = threading.Event()
+    release = threading.Event()
+    done = []
+    s = _streamer(plan4, mesh, prefetch=1)
+    orig = s._build
+
+    def slow_build(mode, _orig=orig):
+        if mode == 1:
+            started.set()
+            assert release.wait(timeout=10)
+            done.append(mode)
+        return _orig(mode)
+
+    s._build = slow_build
+    s.get(0)                      # dispatches mode 1
+    assert started.wait(timeout=10)
+    closer = threading.Thread(target=s.close)
+    closer.start()
+    assert closer.is_alive()      # close blocks on the in-flight build
+    release.set()
+    closer.join(timeout=10)
+    assert not closer.is_alive() and done == [1]
+
+
+def test_solver_close_and_context_manager(small_tensor_4mode):
+    import repro.api as api
+
+    cfg = api.paper({"rank": 4, "runtime.tol": 0.0})
+    plan = api.plan(small_tensor_4mode, cfg)
+    with api.compile(plan, cfg) as solver:
+        solver.sweep()
+        streamer = solver.streamer
+    assert streamer._closed       # context exit closed the streamer
+    with pytest.raises(RuntimeError, match="closed"):
+        solver.sweep()
+    solver.close()                # idempotent after exit
+
+
+def test_update_plan_cancels_stale_pending(plan4, mesh, small_tensor_4mode):
+    """update_plan must settle a stale mode's pending prefetch BEFORE the
+    plan pointer moves — the replacement shards must come from the new
+    plan, never the old one."""
+    from repro.core.partition import build_plan as bp
+
+    s = _streamer(plan4, mesh, prefetch=plan4.nmodes)
+    plans_seen = []
+    orig = s._build
+
+    def recording_build(mode, _orig=orig):
+        plans_seen.append((mode, s.plan))
+        return _orig(mode)
+
+    s._build = recording_build
+    s.get(0)                      # dispatches mode 1 under the old plan
+    plan_b = bp(small_tensor_4mode, 1)
+    s.update_plan(plan_b, modes=[1])
+    arrays = s._wait(1)
+    # the build satisfying the wait ran under the NEW plan (the old-plan
+    # prefetch, if it ever ran, was settled and discarded inside
+    # update_plan before the plan pointer moved)
+    last_mode1_plan = [p for m, p in plans_seen if m == 1][-1]
+    assert last_mode1_plan is plan_b
+    np.testing.assert_array_equal(
+        np.asarray(arrays.values),
+        plan_b.modes[1].values.reshape(arrays.values.shape))
+    s.close()
