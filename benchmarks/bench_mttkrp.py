@@ -30,6 +30,13 @@ HLO-measured exchange volume, and the bf16-wire run's volume (≈ half fp32)
 and final-fit delta vs fp32 — the quantities the multidevice CI job gates
 on.
 
+A fourth scenario exercises the *ingest path* (repro.store): a paper-profile
+tensor written as text is planned twice — once through the in-memory COO
+path, once through the streaming store converter + plan-from-stats — each in
+its own subprocess; the report carries converter throughput (Mnnz/s),
+store-vs-text on-disk size, and the peak-RSS delta of each planning path
+(the store path reads zero chunks, asserted).
+
 Output: ``experiments/bench/BENCH_mttkrp.json`` (benchmarks/common.py's
 standard location) plus a copy at the repo root (``BENCH_mttkrp.json``) so
 the perf trajectory is tracked across PRs. On this CPU-only container the
@@ -173,6 +180,100 @@ def bench_exchange_overlap(*, nnz: int = 40000, sweeps: int = 6,
     return result
 
 
+INGEST_COO_SCRIPT = r"""
+import json, resource, time, tracemalloc
+import repro.api as api
+from repro.sparse.io import read_tns
+base_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+tracemalloc.start()
+t0 = time.perf_counter()
+t = read_tns({tns!r})
+cfg = api.paper({{"runtime.num_devices": 1}})
+plan = api.plan(t, cfg)
+dt = time.perf_counter() - t0
+_, alloc_peak = tracemalloc.get_traced_memory()
+tracemalloc.stop()
+peak_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+print("RESULT_JSON:" + json.dumps({{
+    "nnz": t.nnz, "plan_s": dt, "rss_base_kb": base_kb,
+    "rss_peak_kb": peak_kb, "rss_delta_kb": peak_kb - base_kb,
+    "alloc_peak_kb": alloc_peak // 1024}}))
+"""
+
+INGEST_STORE_SCRIPT = r"""
+import json, os, resource, time, tracemalloc
+import repro.api as api
+from repro.store import TensorStore, convert_tns
+report = convert_tns({tns!r}, {store!r}, chunk_nnz={chunk_nnz})
+store_bytes = sum(os.path.getsize(os.path.join({store!r}, f))
+                  for f in os.listdir({store!r}))
+base_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+tracemalloc.start()
+t0 = time.perf_counter()
+st = TensorStore({store!r})
+cfg = api.paper({{"runtime.num_devices": 1}})
+plan = api.plan(st, cfg)
+dt = time.perf_counter() - t0
+_, alloc_peak = tracemalloc.get_traced_memory()
+tracemalloc.stop()
+peak_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+print("RESULT_JSON:" + json.dumps({{
+    "nnz": st.nnz, "plan_s": dt, "rss_base_kb": base_kb,
+    "rss_peak_kb": peak_kb, "rss_delta_kb": peak_kb - base_kb,
+    "alloc_peak_kb": alloc_peak // 1024,
+    "convert_s": report["elapsed_s"], "nnz_per_s": report["nnz_per_s"],
+    "store_bytes": store_bytes, "chunks": len(report["chunks"]),
+    "plan_chunk_reads": plan.modes[0].store.access_stats["chunk_reads"]}}))
+"""
+
+
+def bench_ingest(*, profile: str = "amazon", scale: float = 1e-3,
+                 chunk_nnz: int = 1 << 17, workdir: str = "/tmp") -> dict:
+    """Ingest A/B: text .tns -> in-memory COO planning vs streaming store
+    conversion + plan-from-stats. Records converter throughput (Mnnz/s),
+    peak memory of each planning path — both process ru_maxrss (meaningful
+    once the working set clears the ~0.4 GB jax import baseline, i.e. at
+    Mnnz+ scale) and the tracemalloc allocation peak (scale-independent; at
+    quick scale this is the memory signal) — and store-vs-text on-disk
+    size. The store path plans from manifest histograms with zero chunk
+    reads (the one hard assertion here). Each path runs in its own
+    subprocess so peaks don't contaminate each other."""
+    import os
+
+    from repro.sparse.io import make_profile_tensor, write_tns
+
+    tns = os.path.join(workdir, f"bench_ingest_{profile}.tns")
+    store = os.path.join(workdir, f"bench_ingest_{profile}.store")
+    t = make_profile_tensor(profile, scale=scale, seed=0)
+    write_tns(tns, t)
+    tns_bytes = os.path.getsize(tns)
+    del t
+
+    coo = run_subprocess_bench(INGEST_COO_SCRIPT.format(tns=tns), devices=1)
+    st = run_subprocess_bench(
+        INGEST_STORE_SCRIPT.format(tns=tns, store=store,
+                                   chunk_nnz=chunk_nnz), devices=1)
+    assert st["plan_chunk_reads"] == 0, st  # plan-from-stats, always
+    result = {
+        "profile": profile, "scale": scale, "nnz": st["nnz"],
+        "chunk_nnz": chunk_nnz, "tns_bytes": tns_bytes,
+        "store_bytes": st["store_bytes"],
+        "store_to_text_ratio": st["store_bytes"] / max(tns_bytes, 1),
+        "convert_s": st["convert_s"],
+        "convert_mnnz_per_s": st["nnz_per_s"] / 1e6,
+        "coo_plan": coo, "store_plan": st,
+        # recorded, not asserted here (memory noise must not lose the
+        # artifact); CI gates on them
+        "store_alloc_below_coo": (st["alloc_peak_kb"]
+                                  < coo["alloc_peak_kb"]),
+        "alloc_peak_ratio": (coo["alloc_peak_kb"]
+                             / max(st["alloc_peak_kb"], 1)),
+        "rss_delta_ratio": (coo["rss_delta_kb"]
+                            / max(st["rss_delta_kb"], 1)),
+    }
+    return result
+
+
 def bench_skew_rebalance(*, nnz: int = 40000, sweeps: int = 6) -> dict:
     """Rebalancer A/B on a hot-index tensor, 4 forced host devices (its own
     subprocess — the main process must keep a single device)."""
@@ -283,6 +384,8 @@ def main() -> None:
                     help="skip the 4-device rebalancer scenario")
     ap.add_argument("--skip-exchange", action="store_true",
                     help="skip the 4-device exchange-overlap scenario")
+    ap.add_argument("--skip-ingest", action="store_true",
+                    help="skip the out-of-core ingest scenario")
     args = ap.parse_args()
 
     if args.quick:
@@ -330,6 +433,21 @@ def main() -> None:
               f"ratio {xchg['bf16_volume_ratio']:.2f}, fit delta "
               f"{xchg['bf16_fit_delta']:.4f}")
 
+    ingest = None
+    if not args.skip_ingest:
+        ingest = bench_ingest(
+            scale=2e-4 if args.quick else 1e-3,
+            chunk_nnz=(1 << 14) if args.quick else (1 << 17))
+        print(f"ingest ({ingest['profile']}, nnz={ingest['nnz']}): convert "
+              f"{ingest['convert_mnnz_per_s']:.2f} Mnnz/s; store "
+              f"{ingest['store_bytes'] / 1e6:.1f} MB vs text "
+              f"{ingest['tns_bytes'] / 1e6:.1f} MB (ratio "
+              f"{ingest['store_to_text_ratio']:.2f}); plan alloc peak "
+              f"COO {ingest['coo_plan']['alloc_peak_kb'] / 1024:.1f} MB vs "
+              f"store {ingest['store_plan']['alloc_peak_kb'] / 1024:.1f} MB "
+              f"(ratio {ingest['alloc_peak_ratio']:.1f}x, chunk reads "
+              f"{ingest['store_plan']['plan_chunk_reads']})")
+
     save_result("BENCH_mttkrp", {
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
@@ -340,6 +458,7 @@ def main() -> None:
         "points": points,
         "skew_rebalance": skew,
         "exchange_overlap": xchg,
+        "ingest": ingest,
     }, also_root=True)
 
 

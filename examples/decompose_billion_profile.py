@@ -10,8 +10,13 @@ Simulate a failure with --crash-after N, then rerun with the same
 --checkpoint-dir to resume from the last completed sweep. The plan cache
 (--plan-cache) makes the rerun skip repartitioning entirely — preprocessing
 is paid once, as in the paper's reporting.
+
+With --out-of-core the tensor is generated straight into a chunked binary
+store (repro.store, never holding a COO) and the whole pipeline runs from
+it: planning reads manifest stats only, shards stream per device.
 """
 import argparse
+import os
 import time
 
 import repro.api as api
@@ -23,6 +28,11 @@ def main():
     ap.add_argument("--profile", default="amazon",
                     choices=["amazon", "patents", "reddit", "twitch"])
     ap.add_argument("--scale", type=float, default=2e-4)
+    ap.add_argument("--out-of-core", action="store_true",
+                    help="generate into a tensor store and run the "
+                         "pipeline out-of-core (repro.store)")
+    ap.add_argument("--store-dir", default="/tmp/amped_store",
+                    help="store directory root for --out-of-core")
     ap.add_argument("--rank", type=int, default=32)
     ap.add_argument("--iters", type=int, default=8)
     ap.add_argument("--preset", default="paper",
@@ -35,8 +45,20 @@ def main():
                     help="simulate a node failure after N sweeps")
     args = ap.parse_args()
 
-    t = make_profile_tensor(args.profile, scale=args.scale, seed=0)
-    print(f"{args.profile} @ scale {args.scale}: shape={t.shape} nnz={t.nnz}")
+    if args.out_of_core:
+        from repro.store import TensorStore, write_profile_store
+        path = os.path.join(args.store_dir,
+                            f"{args.profile}_{args.scale}_s0.store")
+        if not os.path.exists(os.path.join(path, "manifest.json")):
+            write_profile_store(args.profile, path, scale=args.scale,
+                                seed=0)
+        t = TensorStore(path)
+        print(f"{args.profile} @ scale {args.scale} (out-of-core {path}): "
+              f"shape={t.shape} nnz={t.nnz}")
+    else:
+        t = make_profile_tensor(args.profile, scale=args.scale, seed=0)
+        print(f"{args.profile} @ scale {args.scale}: shape={t.shape} "
+              f"nnz={t.nnz}")
 
     cfg = api.preset(args.preset, {
         "rank": args.rank,

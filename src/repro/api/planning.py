@@ -29,12 +29,17 @@ import numpy as np
 from repro.api.config import DecomposeConfig
 from repro.core import partition as partition_mod
 from repro.core.coo import SparseTensor
-from repro.core.partition import CPPlan, ModePartition
+from repro.core.partition import CPPlan, ModeLayout, ModePartition
+from repro.store import TensorStore
+from repro.store import plan as store_plan_mod
 
 __all__ = ["plan", "plan_signature", "save_plan", "load_plan",
            "PlanSignatureError", "CACHE_STATS", "reset_cache_stats"]
 
-PLAN_FORMAT_VERSION = 2  # v2: ModePartition.blocks_true + rebalance_epoch
+# v2: ModePartition.blocks_true + rebalance_epoch; v3: lazy (out-of-core)
+# plans — store-backed manifests carry a store path + digest instead of the
+# O(nnz) arrays.
+PLAN_FORMAT_VERSION = 3
 _SAMPLE_CAP = 65536  # strided digest sample size (cheap at billion scale)
 
 # Observability for tests and ops dashboards: how often plan() rebuilt vs
@@ -51,10 +56,16 @@ class PlanSignatureError(ValueError):
     """A stored plan's signature does not match the requesting problem."""
 
 
-def _tensor_digest(t: SparseTensor) -> str:
+def _tensor_digest(t) -> str:
     """Cheap content digest: shape/nnz plus a strided sample of coordinates
     and values. O(min(nnz, _SAMPLE_CAP)) — never a full scan at billion
-    scale, yet any nnz/shape change and almost any data change re-keys."""
+    scale, yet any nnz/shape change and almost any data change re-keys.
+
+    An out-of-core :class:`~repro.store.TensorStore` is keyed by its
+    manifest digest instead — zero data reads; the manifest already hashes
+    shape, nnz, dtypes and every chunk's statistics."""
+    if isinstance(t, TensorStore):
+        return f"store:{t.digest}"
     h = hashlib.sha256()
     h.update(repr((tuple(int(s) for s in t.shape), int(t.nnz))).encode())
     if t.nnz:
@@ -91,7 +102,8 @@ def _resolve_num_devices(config: DecomposeConfig,
     return len(jax.devices())
 
 
-def plan_signature(tensor: SparseTensor, config: DecomposeConfig, *,
+def plan_signature(tensor: SparseTensor | TensorStore,
+                   config: DecomposeConfig, *,
                    num_devices: int | None = None,
                    rebalance_epoch: int = 0) -> str:
     """Content signature keying the plan cache: tensor identity + every
@@ -121,8 +133,14 @@ def plan_signature(tensor: SparseTensor, config: DecomposeConfig, *,
 def save_plan(p: CPPlan, path: str, *, signature: str | None = None) -> str:
     """Write a plan to ``path`` (a directory): ``manifest.json`` with all
     scalar metadata (+ optional signature) and ``arrays.npz`` with every
-    ModePartition array plus the global↔padded translations, bit-exact."""
+    ModePartition array plus the global↔padded translations, bit-exact.
+
+    Lazy (store-backed) plans persist only the layout — the manifest
+    records the tensor store's path and digest instead of the O(nnz)
+    arrays, and :func:`load_plan` rebinds to the store (refusing a store
+    whose digest changed)."""
     os.makedirs(path, exist_ok=True)
+    lazy = bool(getattr(p.modes[0], "lazy", False)) if p.modes else False
     arrays: dict[str, np.ndarray] = {}
     manifest = {
         "format_version": PLAN_FORMAT_VERSION,
@@ -131,13 +149,19 @@ def save_plan(p: CPPlan, path: str, *, signature: str | None = None) -> str:
         "num_devices": int(p.num_devices),
         "norm": float(p.norm),
         "rebalance_epoch": int(p.rebalance_epoch),
+        "lazy": lazy,
         "modes": [],
     }
+    if lazy:
+        store = p.modes[0].store
+        manifest["store"] = {"path": os.path.abspath(store.path),
+                             "digest": store.digest}
     for d, part in enumerate(p.modes):
         manifest["modes"].append(
             {k: int(getattr(part, k)) for k in ModePartition.META_FIELDS})
-        for k in ModePartition.ARRAY_FIELDS:
-            arrays[f"mode{d}_{k}"] = getattr(part, k)
+        if not lazy:
+            for k in ModePartition.ARRAY_FIELDS:
+                arrays[f"mode{d}_{k}"] = getattr(part, k)
         arrays[f"g2p_{d}"] = np.asarray(p.global_to_padded[d])
         arrays[f"p2g_{d}"] = np.asarray(p.padded_to_global[d])
     tmp = os.path.join(path, "arrays.npz.tmp")
@@ -171,12 +195,15 @@ def load_plan(path: str, *, expect_signature: str | None = None) -> CPPlan:
     with np.load(os.path.join(path, "arrays.npz")) as npz:
         modes, g2ps, p2gs = [], [], []
         for d, meta in enumerate(manifest["modes"]):
-            fields = {k: int(meta[k]) for k in ModePartition.META_FIELDS}
-            fields.update(
-                {k: npz[f"mode{d}_{k}"] for k in ModePartition.ARRAY_FIELDS})
-            modes.append(ModePartition(**fields))
+            if not manifest.get("lazy"):
+                fields = {k: int(meta[k]) for k in ModePartition.META_FIELDS}
+                fields.update({k: npz[f"mode{d}_{k}"]
+                               for k in ModePartition.ARRAY_FIELDS})
+                modes.append(ModePartition(**fields))
             g2ps.append(npz[f"g2p_{d}"])
             p2gs.append(npz[f"p2g_{d}"])
+    if manifest.get("lazy"):
+        modes = _rebind_lazy_modes(path, manifest, g2ps, p2gs)
     return CPPlan(
         shape=tuple(manifest["shape"]),
         num_devices=int(manifest["num_devices"]),
@@ -188,15 +215,56 @@ def load_plan(path: str, *, expect_signature: str | None = None) -> CPPlan:
     )
 
 
+def _rebind_lazy_modes(path: str, manifest: dict, g2ps, p2gs):
+    """Reattach a persisted lazy plan to its tensor store: reopen the store
+    named in the manifest, verify its digest is still the one the plan was
+    built from, and rebuild the lazy partitions from the saved layouts
+    (owner groups are recoverable from ``g2p // rows_max``; everything else
+    re-derives from the store's histogram sidecars)."""
+    ref = manifest.get("store") or {}
+    try:
+        store = TensorStore(ref.get("path", ""))
+    except (OSError, ValueError) as e:
+        raise PlanSignatureError(
+            f"lazy plan at {path!r} references tensor store "
+            f"{ref.get('path')!r}, which no longer opens: {e}") from e
+    if store.digest != ref.get("digest"):
+        raise PlanSignatureError(
+            f"lazy plan at {path!r} was built from store digest "
+            f"{str(ref.get('digest'))[:16]}…, but {store.path!r} now has "
+            f"{store.digest[:16]}… (store rewritten since planning)")
+    layouts = []
+    for d, meta in enumerate(manifest["modes"]):
+        g2p = np.asarray(g2ps[d], np.int64)
+        rows_max = int(meta["rows_max"])
+        owner = (g2p // rows_max).astype(np.int32)
+        layouts.append(ModeLayout(
+            mode=int(meta["mode"]), num_devices=int(meta["num_devices"]),
+            r=int(meta["r"]), n_groups=int(meta["n_groups"]),
+            rows_max=rows_max, tile=int(meta["tile"]),
+            block_p=int(meta["block_p"]), owner=owner,
+            global_to_padded=g2p,
+            padded_to_global=np.asarray(p2gs[d], np.int64),
+            rows_owned=np.bincount(owner, minlength=int(meta["n_groups"])
+                                   ).astype(np.int64)))
+    return store_plan_mod.lazy_parts_from_layouts(store, layouts)
+
+
 # -- the public entry ---------------------------------------------------------
 
-def plan(tensor: SparseTensor, config: DecomposeConfig, *,
+def plan(tensor: SparseTensor | TensorStore, config: DecomposeConfig, *,
          cache_dir: str | None = None,
          num_devices: int | None = None) -> CPPlan:
     """Preprocess ``tensor`` for ``config``: autotune the blocking geometry
     (if requested), partition every mode, and — when ``cache_dir`` is given —
     reuse an on-disk plan with a matching content signature instead of
     repartitioning. Pure host work; returns a :class:`CPPlan`.
+
+    ``tensor`` may be an out-of-core :class:`~repro.store.TensorStore`: the
+    partition is then computed from the store's manifest histograms alone —
+    no chunk data is read here — and the returned plan's modes materialize
+    per-device shards by streaming at compile time
+    (:class:`~repro.store.StoreModePartition`).
     """
     nd = _resolve_num_devices(config, num_devices)
     tile, block_p = _resolve_geometry(tensor.nmodes, config)
@@ -215,9 +283,16 @@ def plan(tensor: SparseTensor, config: DecomposeConfig, *,
                 pass  # corrupted/stale entry: rebuild below and overwrite
 
     CACHE_STATS["misses"] += 1
-    p = partition_mod.build_plan(
-        tensor, nd, strategy=config.resolved_policy(),
-        replication=config.partition.replication, tile=tile, block_p=block_p)
+    if isinstance(tensor, TensorStore):
+        p = store_plan_mod.build_plan_from_store(
+            tensor, nd, strategy=config.resolved_policy(),
+            replication=config.partition.replication, tile=tile,
+            block_p=block_p)
+    else:
+        p = partition_mod.build_plan(
+            tensor, nd, strategy=config.resolved_policy(),
+            replication=config.partition.replication, tile=tile,
+            block_p=block_p)
     if cache_dir is not None:
         try:
             save_plan(p, os.path.join(cache_dir, sig[:32]), signature=sig)

@@ -51,6 +51,15 @@ class CPSolver:
     :class:`~repro.schedule.rebalance.Rebalancer`)."""
 
     def __init__(self, plan: CPPlan, config: DecomposeConfig, mesh: Mesh):
+        if config.schedule.telemetry_enabled and \
+                any(getattr(p, "lazy", False) for p in plan.modes):
+            raise ValueError(
+                "schedule.rebalance='measure'/'on' needs an in-memory plan: "
+                "the rebalancer's probes and migrations address whole-mode "
+                "shard arrays, which an out-of-core TensorStore plan "
+                "deliberately never materializes. Plan from the in-memory "
+                "tensor (store.to_coo()) to use the dynamic scheduler, or "
+                "run with schedule.rebalance='off'.")
         self.plan = plan
         self.config = config
         self.mesh = mesh

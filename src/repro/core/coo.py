@@ -11,7 +11,8 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["SparseTensor", "random_sparse", "from_dense", "to_dense"]
+__all__ = ["SparseTensor", "random_sparse", "draw_sparse_block",
+           "from_dense", "to_dense"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +94,34 @@ def to_dense(t: SparseTensor) -> np.ndarray:
     return out
 
 
+def draw_sparse_block(rng: np.random.Generator, shape: Sequence[int],
+                      k: int, *, distribution: str = "uniform",
+                      zipf_a: float = 1.3
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Draw ``k`` synthetic nonzeros: 0-based int64 indices ``(k, nmodes)``
+    and float32 values. The single source of the per-mode distributions —
+    :func:`random_sparse` is one full-size draw of this; the out-of-core
+    generator (:func:`repro.store.write_profile_store`) streams chunk-sized
+    draws of it to disk without ever holding a full COO.
+
+    ``distribution='zipf'`` skews nonzeros toward low indices per mode, the
+    "popular streamers/games" effect the paper observes on Twitch (§5.5).
+    """
+    cols = []
+    for s in shape:
+        if distribution == "uniform":
+            cols.append(rng.integers(0, s, size=k, dtype=np.int64))
+        elif distribution == "zipf":
+            # Zipf over [1, inf); fold into [0, s) to keep heavy head.
+            z = rng.zipf(zipf_a, size=k) - 1
+            cols.append(np.minimum(z, s - 1).astype(np.int64))
+        else:
+            raise ValueError(f"unknown distribution {distribution!r}")
+    ind = np.stack(cols, axis=1)
+    val = rng.standard_normal(k).astype(np.float32)
+    return ind, val
+
+
 def random_sparse(
     shape: Sequence[int],
     nnz: int,
@@ -102,23 +131,10 @@ def random_sparse(
     zipf_a: float = 1.3,
     dedup: bool = True,
 ) -> SparseTensor:
-    """Synthetic sparse tensor.
-
-    ``distribution='zipf'`` skews nonzeros toward low indices per mode, the
-    "popular streamers/games" effect the paper observes on Twitch (§5.5).
-    """
+    """Synthetic sparse tensor (see :func:`draw_sparse_block` for the
+    per-mode distributions)."""
     rng = np.random.default_rng(seed)
-    cols = []
-    for s in shape:
-        if distribution == "uniform":
-            cols.append(rng.integers(0, s, size=nnz, dtype=np.int64))
-        elif distribution == "zipf":
-            # Zipf over [1, inf); fold into [0, s) to keep heavy head.
-            z = rng.zipf(zipf_a, size=nnz) - 1
-            cols.append(np.minimum(z, s - 1).astype(np.int64))
-        else:
-            raise ValueError(f"unknown distribution {distribution!r}")
-    ind = np.stack(cols, axis=1).astype(np.int32)
-    val = rng.standard_normal(nnz).astype(np.float32)
-    t = SparseTensor(ind, val, tuple(shape))
+    ind, val = draw_sparse_block(rng, shape, nnz, distribution=distribution,
+                                 zipf_a=zipf_a)
+    t = SparseTensor(ind.astype(np.int32), val, tuple(shape))
     return t.deduplicated() if dedup else t

@@ -61,25 +61,74 @@ def cp_mesh(num_devices: int, r: int, devices=None) -> Mesh:
 
 def shard_plan_mode(part: ModePartition, mesh: Mesh,
                     group_axes=("group",), sub_axis="sub") -> DeviceArrays:
-    """Move one mode's host arrays onto the mesh, sharded one-shard-per-device."""
+    """Move one mode's host arrays onto the mesh, sharded one-shard-per-device.
+
+    Out-of-core partitions (``part.lazy``, see
+    :class:`repro.store.StoreModePartition`) never stack a host-side
+    ``(m, nnz_max)`` array: each device's slice is streamed from the store
+    and placed on its device one at a time, so peak host memory stays
+    bounded by a single device's shard plus the store's chunk size.
+    """
     g, r = part.n_groups, part.r
 
     def reshape(x):
         return x.reshape((g, r) + x.shape[1:])
 
-    spec2 = P(group_axes, sub_axis)
-
     def put(x, trailing):
         sh = NamedSharding(mesh, P(group_axes, sub_axis, *([None] * trailing)))
         return jax.device_put(reshape(x), sh)
 
+    if getattr(part, "lazy", False):
+        indices, values, local_rows = _shard_lazy_mode(
+            part, mesh, group_axes, sub_axis)
+    else:
+        indices = put(part.indices, 2)
+        values = put(part.values, 1)
+        local_rows = put(part.local_rows, 1)
+
     return DeviceArrays(
-        indices=put(part.indices, 2),
-        values=put(part.values, 1),
-        local_rows=put(part.local_rows, 1),
+        indices=indices,
+        values=values,
+        local_rows=local_rows,
         block_to_tile=put(part.block_to_tile, 1),
         tile_visited=put(part.tile_visited, 1),
     )
+
+
+def _shard_lazy_mode(part, mesh: Mesh, group_axes, sub_axis):
+    """Per-device streaming placement of a lazy partition's O(nnz) arrays.
+
+    Materializes ONE device's ``(indices, values, local_rows)`` at a time
+    (``part.device_arrays``), places the three buffers on that device, and
+    assembles the global sharded arrays from the single-device pieces —
+    the host never holds more than one device's slice.
+    """
+    g, r = part.n_groups, part.r
+    nmodes = part.nmodes
+    shapes = {
+        "indices": ((g, r, part.nnz_max, nmodes), np.int32, 2),
+        "values": ((g, r, part.nnz_max), np.float32, 1),
+        "local_rows": ((g, r, part.nnz_max), np.int32, 1),
+    }
+    shardings = {
+        k: NamedSharding(mesh, P(group_axes, sub_axis, *([None] * tr)))
+        for k, (_, _, tr) in shapes.items()}
+    bufs = {k: [] for k in shapes}
+    # one index map serves all three arrays: the (group, sub) placement is
+    # identical, only trailing (replicated) dims differ
+    dev_map = shardings["values"].devices_indices_map(shapes["values"][0])
+    for device, idx in dev_map.items():
+        gg = idx[0].start or 0
+        ss = idx[1].start or 0
+        di, dv, dr = part.device_arrays(gg * r + ss)
+        bufs["indices"].append(jax.device_put(di[None, None], device))
+        bufs["values"].append(jax.device_put(dv[None, None], device))
+        bufs["local_rows"].append(jax.device_put(dr[None, None], device))
+        del di, dv, dr  # host copy freed before the next device streams
+    return tuple(
+        jax.make_array_from_single_device_arrays(
+            shapes[k][0], shardings[k], bufs[k])
+        for k in ("indices", "values", "local_rows"))
 
 
 def _local_ec(part_meta: dict, indices, values, local_rows, block_to_tile,

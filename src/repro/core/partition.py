@@ -47,8 +47,10 @@ from repro.schedule import static as static_policies
 from repro.schedule.static import auto_replication  # noqa: F401  (re-export)
 
 __all__ = [
+    "ModeLayout",
     "ModePartition",
     "CPPlan",
+    "mode_layout",
     "partition_mode",
     "build_plan",
     "block_device_rows",
@@ -71,6 +73,82 @@ def _lcm(a: int, b: int) -> int:
 
 
 @dataclasses.dataclass(frozen=True)
+class ModeLayout:
+    """The histogram-only half of one mode's partition: which group owns
+    each global index and the padded row layout. Everything here is
+    computable from the mode's nnz histogram alone — no nonzero data — in
+    O(index space), which is what lets :mod:`repro.store` plan out-of-core
+    tensors from manifest statistics without reading chunk data. The
+    in-memory :func:`partition_mode` builds its device arrays on top of the
+    exact same layout, so the two paths agree structurally."""
+
+    mode: int
+    num_devices: int
+    r: int
+    n_groups: int
+    rows_max: int
+    tile: int
+    block_p: int
+    owner: np.ndarray              # (I,) int32 owner group per global index
+    global_to_padded: np.ndarray   # (I,) int64
+    padded_to_global: np.ndarray   # (n_groups*rows_max,) int64, -1 pad
+    rows_owned: np.ndarray         # (n_groups,) int64
+
+    @property
+    def n_tiles(self) -> int:
+        return self.rows_max // self.tile
+
+    @property
+    def padded_rows(self) -> int:
+        return self.n_groups * self.rows_max
+
+
+def mode_layout(
+    hist: np.ndarray,
+    mode: int,
+    num_devices: int,
+    *,
+    strategy: Strategy = "amped_cdf",
+    replication: int | None = None,
+    tile: int | None = None,
+    block_p: int | None = None,
+) -> ModeLayout:
+    """Resolve one mode's partition layout from its nnz histogram only."""
+    tile = DEFAULT_TILE if tile is None else tile
+    block_p = DEFAULT_BLOCK_P if block_p is None else block_p
+    m = num_devices
+    policy = static_policies.get_policy(strategy)
+    forced_r = policy.replication(hist, m)
+    if forced_r is not None:
+        r = forced_r
+    elif replication is None:
+        r = auto_replication(hist, m)
+    else:
+        r = replication
+    if m % r:
+        raise ValueError(f"replication {r} must divide device count {m}")
+    n_groups = m // r
+
+    owner = _assign_groups(hist, n_groups, strategy)
+    max_rows_owned = int(np.bincount(owner, minlength=n_groups).max()) if owner.size else 0
+    unit = _lcm(tile, r)
+    rows_max = max(unit, -(-max(max_rows_owned, 1) // unit) * unit)
+    if rows_max % r:
+        # Unreachable through the lcm padding above, but the invariant is
+        # load-bearing for the exchange: a non-divisible rows_max would make
+        # the intra-group reduce-scatter assign fractional row ownership.
+        raise ValueError(
+            f"mode {mode}: padded row count rows_max={rows_max} is not "
+            f"divisible by replication r={r}; the intra-group merge would "
+            f"corrupt row ownership")
+    g2p, p2g, rows_owned = _layout_rows(owner, n_groups, rows_max)
+    return ModeLayout(
+        mode=mode, num_devices=m, r=r, n_groups=n_groups, rows_max=rows_max,
+        tile=tile, block_p=block_p, owner=np.asarray(owner, np.int32),
+        global_to_padded=g2p, padded_to_global=p2g, rows_owned=rows_owned)
+
+
+@dataclasses.dataclass(frozen=True)
 class ModePartition:
     """Device-ready sharding of one per-mode tensor copy.
 
@@ -88,6 +166,10 @@ class ModePartition:
                     "tile_visited", "nnz_true", "rows_owned", "blocks_true")
     META_FIELDS = ("mode", "num_devices", "r", "n_groups", "rows_max",
                    "tile", "block_p")
+    # Out-of-core counterpart (repro.store.StoreModePartition) flips this:
+    # lazy partitions defer indices/values/local_rows to per-device
+    # streaming materialization and reject whole-array access.
+    lazy = False
 
     mode: int
     num_devices: int
@@ -249,35 +331,13 @@ def partition_mode(
     None, input-mode indices are left untranslated (identity) — callers
     normally go through :func:`build_plan`, which wires all modes.
     """
-    tile = DEFAULT_TILE if tile is None else tile
-    block_p = DEFAULT_BLOCK_P if block_p is None else block_p
-    m = num_devices
     hist = t.mode_histogram(mode)
-    policy = static_policies.get_policy(strategy)
-    forced_r = policy.replication(hist, m)
-    if forced_r is not None:
-        r = forced_r
-    elif replication is None:
-        r = auto_replication(hist, m)
-    else:
-        r = replication
-    if m % r:
-        raise ValueError(f"replication {r} must divide device count {m}")
-    n_groups = m // r
-
-    owner = _assign_groups(hist, n_groups, strategy)
-    max_rows_owned = int(np.bincount(owner, minlength=n_groups).max()) if owner.size else 0
-    unit = _lcm(tile, r)
-    rows_max = max(unit, -(-max(max_rows_owned, 1) // unit) * unit)
-    if rows_max % r:
-        # Unreachable through the lcm padding above, but the invariant is
-        # load-bearing for the exchange: a non-divisible rows_max would make
-        # the intra-group reduce-scatter assign fractional row ownership.
-        raise ValueError(
-            f"mode {mode}: padded row count rows_max={rows_max} is not "
-            f"divisible by replication r={r}; the intra-group merge would "
-            f"corrupt row ownership")
-    g2p, p2g, rows_owned = _layout_rows(owner, n_groups, rows_max)
+    lay = mode_layout(hist, mode, num_devices, strategy=strategy,
+                      replication=replication, tile=tile, block_p=block_p)
+    m, r, n_groups = lay.num_devices, lay.r, lay.n_groups
+    tile, block_p, rows_max = lay.tile, lay.block_p, lay.rows_max
+    owner, g2p, p2g, rows_owned = (lay.owner, lay.global_to_padded,
+                                   lay.padded_to_global, lay.rows_owned)
 
     # --- per-nonzero placement -------------------------------------------
     out_idx = t.indices[:, mode]

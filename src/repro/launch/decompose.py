@@ -8,6 +8,8 @@
         --set kernel.num_buffers=3 --set runtime.tol=0   # dotted overrides
     PYTHONPATH=src python -m repro.launch.decompose --preset paper \
         --set partition.strategy=equal_nnz --rebalance   # dynamic scheduler
+    PYTHONPATH=src python -m repro.launch.decompose --preset paper \
+        --store tensor.store --plan-cache plans/   # out-of-core ingest path
 
 Runs the staged repro.api pipeline and reports preprocessing (plan) time
 separately from execution time, the way the paper does — pass --plan-cache
@@ -38,7 +40,16 @@ def main():
                     metavar="KEY=VALUE",
                     help="dotted config override, e.g. kernel.variant=fused "
                          "or runtime.tol=0 (repeatable)")
-    ap.add_argument("--profile", default="amazon")
+    src = ap.add_mutually_exclusive_group()
+    src.add_argument("--profile", default="amazon",
+                     help="synthetic paper-dataset profile (default)")
+    src.add_argument("--tns", default=None, metavar="PATH",
+                     help="read an in-memory tensor from a .tns/.tns.gz "
+                          "file instead of a synthetic profile")
+    src.add_argument("--store", default=None, metavar="DIR",
+                     help="run out-of-core from a tensor store directory "
+                          "(repro.store.convert); planning reads manifest "
+                          "stats only and shards stream per device")
     ap.add_argument("--scale", type=float, default=2e-4)
     ap.add_argument("--rank", type=int, default=32)
     ap.add_argument("--iters", type=int, default=5)
@@ -76,8 +87,18 @@ def main():
         cfg = cfg.with_overrides({"schedule.rebalance": "measure"})
     cfg = api.apply_set_args(cfg, args.set_args)
 
-    t = make_profile_tensor(args.profile, scale=args.scale, seed=0)
-    print(f"{args.profile} @ {args.scale}: shape={t.shape} nnz={t.nnz} "
+    if args.store is not None:
+        from repro.store import TensorStore
+        t = TensorStore(args.store)
+        source = f"store {args.store}"
+    elif args.tns is not None:
+        from repro.sparse.io import read_tns
+        t = read_tns(args.tns)
+        source = args.tns
+    else:
+        t = make_profile_tensor(args.profile, scale=args.scale, seed=0)
+        source = f"{args.profile} @ {args.scale}"
+    print(f"{source}: shape={t.shape} nnz={t.nnz} "
           f"preset={args.preset} rank={cfg.rank} "
           f"variant={cfg.kernel.resolved_variant()} "
           f"policy={cfg.resolved_policy()} "

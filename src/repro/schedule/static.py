@@ -16,6 +16,12 @@ of owning an index — rather than the raw nnz histogram. With the default
 coefficients the two are proportional, so every policy reproduces the
 historical ``core/partition.py`` heuristics bit-for-bit; a calibrated model
 (e.g. nonzero ``sec_per_row``) shifts the splits toward the measured cost.
+
+The histogram itself may come from anywhere: an in-memory tensor's
+``mode_histogram`` or an out-of-core store's exact histogram sidecar
+(:meth:`repro.store.TensorStore.mode_histogram`, int64) — policies are the
+layer that makes plan-from-stats possible, since owning decisions never
+touch nonzero data.
 """
 from __future__ import annotations
 

@@ -1,21 +1,29 @@
 """Sparse tensor I/O and the paper's dataset profiles.
 
 ``read_tns``/``write_tns`` handle the FROSTT ``.tns`` text format (1-based
-coordinates, value last). ``make_profile_tensor`` produces synthetic tensors
-whose shape *ratios* and skew match the paper's four billion-scale datasets
-(Table 3), scaled down so they fit this container; benchmarks parameterize the
-scale.
+coordinates, value last), transparently compressed when the path ends in
+``.gz``. ``make_profile_tensor`` produces synthetic tensors whose shape
+*ratios* and skew match the paper's four billion-scale datasets (Table 3),
+scaled down so they fit this container; benchmarks parameterize the scale.
+
+At billion scale the text format itself is the bottleneck — parse once and
+convert to the chunked binary store (:mod:`repro.store`), which this module's
+:func:`iter_tns_batches` feeds without ever holding the full COO.
 """
 from __future__ import annotations
 
 import dataclasses
+import gzip
 import itertools
+from typing import Iterator
 
 import numpy as np
 
-from repro.core.coo import SparseTensor, random_sparse
+from repro.core.coo import (SparseTensor, draw_sparse_block,  # noqa: F401
+                            random_sparse)
 
-__all__ = ["read_tns", "write_tns", "DATASET_PROFILES", "make_profile_tensor"]
+__all__ = ["read_tns", "write_tns", "iter_tns_batches", "DATASET_PROFILES",
+           "make_profile_tensor"]
 
 # Lines parsed per batch. Each batch becomes two ndarray chunks immediately,
 # so peak Python-object overhead is O(chunk_lines), not O(nnz) — at billion
@@ -23,46 +31,96 @@ __all__ = ["read_tns", "write_tns", "DATASET_PROFILES", "make_profile_tensor"]
 # (tens of GB of pointer overhead) before the first ndarray existed.
 READ_TNS_CHUNK_LINES = 1 << 20
 
+# Nonzeros per np.savetxt call in write_tns: bounds the formatted-text
+# working set without paying a Python-level loop per line.
+WRITE_TNS_CHUNK = 1 << 18
 
-def read_tns(path: str, *, chunk_lines: int = READ_TNS_CHUNK_LINES
-             ) -> SparseTensor:
-    """Read a FROSTT ``.tns`` text file (1-based coordinates, value last).
 
-    Chunked: lines are consumed in fixed-size batches, each parsed straight
-    into ndarrays by ``np.loadtxt`` (C tokenizer, no per-line Python lists).
-    ``#``/``%`` comment lines and blank lines are skipped anywhere in the
-    file.
+def _open_text(path: str, mode: str = "rt"):
+    """Open ``path`` as text, via ``gzip`` when the extension says so."""
+    if path.endswith(".gz"):
+        return gzip.open(path, mode)
+    return open(path, mode.rstrip("t") or "r")
+
+
+def iter_tns_batches(path: str, *, chunk_lines: int = READ_TNS_CHUNK_LINES
+                     ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Stream a ``.tns``/``.tns.gz`` file as ``(indices, values)`` batches.
+
+    ``indices`` are 0-based int64 ``(k, nmodes)``, ``values`` float32
+    ``(k,)``, with ``k <= chunk_lines``. Peak memory is O(chunk_lines) — this
+    is the ingest path of the out-of-core store converter
+    (:func:`repro.store.convert_tns`) as well as of :func:`read_tns`.
+    ``#``/``%`` comment lines and blank lines are skipped anywhere.
     """
-    ind_chunks: list[np.ndarray] = []
-    val_chunks: list[np.ndarray] = []
     ncols = None
-    with open(path) as f:
-        for batch in iter(
-                lambda: list(itertools.islice(f, chunk_lines)), []):
+    with _open_text(path) as f:
+        for batch in iter(lambda: list(itertools.islice(f, chunk_lines)), []):
             arr = np.loadtxt(batch, dtype=np.float64, comments=("#", "%"),
                              ndmin=2)
             if arr.size == 0:
                 continue  # batch was all comments/blanks
             if ncols is None:
                 ncols = arr.shape[1]
+                if ncols < 2:
+                    raise ValueError(
+                        f"{path}: a .tns line needs at least one coordinate "
+                        f"and a value, got {ncols} column(s)")
             elif arr.shape[1] != ncols:
                 raise ValueError(
                     f"{path}: inconsistent column count "
                     f"({arr.shape[1]} vs {ncols})")
-            ind_chunks.append(arr[:, :-1].astype(np.int64) - 1)
-            val_chunks.append(arr[:, -1].astype(np.float32))
+            yield arr[:, :-1].astype(np.int64) - 1, arr[:, -1].astype(np.float32)
+
+
+def read_tns(path: str, *, chunk_lines: int = READ_TNS_CHUNK_LINES
+             ) -> SparseTensor:
+    """Read a FROSTT ``.tns`` text file (1-based coordinates, value last);
+    ``.gz`` paths are decompressed on the fly.
+
+    Chunked: lines are consumed in fixed-size batches, each parsed straight
+    into ndarrays by ``np.loadtxt`` (C tokenizer, no per-line Python lists).
+
+    The index dtype is picked from the observed maximum coordinate — int32
+    when it fits (the :class:`SparseTensor` container dtype). Coordinates
+    beyond int32 raise a clear ``ValueError`` instead of the silent
+    wrap-around an unchecked cast would produce; tensors that large belong
+    in the out-of-core store (``repro.store.convert_tns``), whose per-mode
+    dtypes scale past int32.
+    """
+    ind_chunks: list[np.ndarray] = []
+    val_chunks: list[np.ndarray] = []
+    for ind, val in iter_tns_batches(path, chunk_lines=chunk_lines):
+        ind_chunks.append(ind)
+        val_chunks.append(val)
     if not ind_chunks:
         raise ValueError(f"{path}: no nonzeros")
     ind = np.concatenate(ind_chunks)
     val = np.concatenate(val_chunks)
+    max_index = int(ind.max()) if ind.size else 0
+    if max_index > np.iinfo(np.int32).max:
+        raise ValueError(
+            f"{path}: coordinate {max_index + 1} overflows the in-memory "
+            f"int32 index dtype; convert this tensor to the out-of-core "
+            f"store instead (repro.store.convert_tns), which sizes index "
+            f"dtypes per mode")
     shape = tuple(int(s) for s in (ind.max(axis=0) + 1))
     return SparseTensor(ind.astype(np.int32), val, shape)
 
 
-def write_tns(path: str, t: SparseTensor) -> None:
-    with open(path, "w") as f:
-        for idx, v in zip(t.indices, t.values):
-            f.write(" ".join(str(int(i) + 1) for i in idx) + f" {float(v)}\n")
+def write_tns(path: str, t: SparseTensor, *,
+              chunk: int = WRITE_TNS_CHUNK) -> None:
+    """Write ``t`` in ``.tns`` text (1-based, value last), gzip-compressed
+    when ``path`` ends in ``.gz``. Vectorized: ``np.savetxt`` formats
+    ``chunk`` nonzeros per call (C-level formatting, no per-line Python
+    loop); ``%.9g`` round-trips every float32 value exactly."""
+    fmt = " ".join(["%d"] * t.nmodes) + " %.9g"
+    with _open_text(path, "wt") as f:
+        for s in range(0, t.nnz, chunk):
+            block = np.column_stack([
+                t.indices[s:s + chunk].astype(np.float64) + 1,
+                t.values[s:s + chunk].astype(np.float64)])
+            np.savetxt(f, block, fmt=fmt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +143,14 @@ DATASET_PROFILES: dict[str, DatasetProfile] = {
 }
 
 
+def profile_geometry(name: str, scale: float) -> tuple[tuple[int, ...], int]:
+    """(shape, nnz) of a paper dataset profile at the given linear scale."""
+    p = DATASET_PROFILES[name]
+    shape = tuple(max(8, int(round(s * scale))) for s in p.shape)
+    nnz = max(64, int(round(p.nnz * scale)))
+    return shape, nnz
+
+
 def make_profile_tensor(name: str, *, scale: float = 1e-3, seed: int = 0) -> SparseTensor:
     """Synthetic stand-in for a paper dataset, linearly scaled.
 
@@ -93,7 +159,6 @@ def make_profile_tensor(name: str, *, scale: float = 1e-3, seed: int = 0) -> Spa
     are preserved while fitting in this container.
     """
     p = DATASET_PROFILES[name]
-    shape = tuple(max(8, int(round(s * scale))) for s in p.shape)
-    nnz = max(64, int(round(p.nnz * scale)))
+    shape, nnz = profile_geometry(name, scale)
     return random_sparse(
         shape, nnz, seed=seed, distribution=p.distribution, zipf_a=p.zipf_a)

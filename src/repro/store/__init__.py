@@ -1,0 +1,44 @@
+"""repro.store — the out-of-core sparse tensor subsystem.
+
+The paper's datasets are billions of nonzeros; the in-memory
+:class:`~repro.core.coo.SparseTensor` path needs the full COO in host RAM
+before the first partition decision. This package removes that last
+O(nnz)-resident stage:
+
+* **Format** (:mod:`repro.store.format`) — a versioned directory of
+  little-endian packed arrays in fixed-size nnz chunks, per-mode minimized
+  index dtypes, a JSON manifest with per-chunk per-mode stats, and exact
+  per-mode histogram sidecars.
+* **Ingest** (:mod:`repro.store.writer`) — :func:`convert_tns` (two-pass
+  streaming ``.tns``/``.tns.gz`` converter, ``python -m
+  repro.store.convert``), :func:`write_store_from_coo`, and the
+  store-native profile generator :func:`write_profile_store` (paper-scale
+  synthetic tensors with O(chunk) memory).
+* **Read** (:mod:`repro.store.store`) — :class:`TensorStore`, the
+  mmap-backed ``SparseTensor``-compatible surface with counted chunk
+  access.
+* **Plan** (:mod:`repro.store.plan`) — :func:`build_plan_from_store`
+  partitions from manifest histograms with zero chunk reads;
+  :class:`StoreModePartition` materializes per-device shards by streaming
+  only overlapping chunks, bit-identical to the in-memory path.
+
+``api.plan``/``api.compile`` accept a :class:`TensorStore` wherever they
+accept a :class:`SparseTensor`::
+
+    from repro.store import convert_tns, TensorStore
+    convert_tns("amazon.tns.gz", "amazon.store")
+    plan = api.plan(TensorStore("amazon.store"), cfg, cache_dir="plans/")
+    result = api.compile(plan, cfg).run(10)
+"""
+from repro.store.format import StoreFormatError
+from repro.store.plan import (OutOfCoreError, StoreModePartition,
+                              build_plan_from_store)
+from repro.store.store import TensorStore
+from repro.store.writer import (StoreWriter, convert_tns,
+                                write_profile_store, write_store_from_coo)
+
+__all__ = [
+    "TensorStore", "StoreWriter", "StoreFormatError",
+    "convert_tns", "write_store_from_coo", "write_profile_store",
+    "OutOfCoreError", "StoreModePartition", "build_plan_from_store",
+]

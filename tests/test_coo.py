@@ -114,3 +114,74 @@ def test_profiles_scaled():
         assert t.nnz > 0
     tw = make_profile_tensor("twitch", scale=1e-5)
     assert tw.nmodes == 5  # twitch is the 5-mode tensor
+
+
+def test_tns_gz_roundtrip(tmp_path):
+    """.tns.gz paths are compressed/decompressed transparently, both ways,
+    and the values round-trip float32-exactly (the %.9g formatter)."""
+    t = random_sparse((25, 14, 9), 300, seed=9, distribution="zipf")
+    plain = str(tmp_path / "x.tns")
+    gz = str(tmp_path / "x.tns.gz")
+    write_tns(plain, t)
+    write_tns(gz, t)
+    with open(gz, "rb") as f:
+        assert f.read(2) == b"\x1f\x8b"  # really gzip on disk
+    a, b = read_tns(plain), read_tns(gz)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.values, b.values)
+    np.testing.assert_array_equal(a.indices, t.indices)
+    np.testing.assert_array_equal(a.values, t.values)  # exact, not approx
+
+
+def test_write_tns_chunked_identical(tmp_path):
+    """The vectorized writer emits identical text regardless of chunking."""
+    t = random_sparse((25, 14, 9), 300, seed=10)
+    p1, p2 = str(tmp_path / "a.tns"), str(tmp_path / "b.tns")
+    write_tns(p1, t, chunk=7)
+    write_tns(p2, t, chunk=10**6)
+    assert open(p1).read() == open(p2).read()
+
+
+def test_read_tns_rejects_int32_overflow(tmp_path):
+    p = str(tmp_path / "huge.tns")
+    with open(p, "w") as f:
+        f.write("1 1 1.0\n")
+        f.write(f"{2**31 + 5} 2 2.0\n")  # 1-based coord > int32 max
+    with pytest.raises(ValueError, match="int32.*store|store.*int32"):
+        read_tns(p)
+
+
+def test_make_profile_tensor_deterministic():
+    a = make_profile_tensor("amazon", scale=2e-6, seed=3)
+    b = make_profile_tensor("amazon", scale=2e-6, seed=3)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.values, b.values)
+    c = make_profile_tensor("amazon", scale=2e-6, seed=4)
+    assert not (a.nnz == c.nnz
+                and np.array_equal(a.indices, c.indices)
+                and np.array_equal(a.values, c.values))
+
+
+def test_profile_skew_differs_from_uniform():
+    """The zipf profiles concentrate mass in the head of each mode, a
+    same-geometry uniform draw does not — the property that drives the
+    paper's Twitch load-balancing discussion (§5.5)."""
+    zipf = make_profile_tensor("twitch", scale=2e-5, seed=0)
+    uni = random_sparse(zipf.shape, zipf.nnz, seed=0,
+                        distribution="uniform")
+    def head_mass(t):
+        h = t.mode_histogram(0).astype(np.float64)
+        return h[: max(1, h.size // 100)].sum() / h.sum()
+    assert head_mass(zipf) > 0.25   # top 1% carries >25% of nonzeros
+    assert head_mass(uni) < 0.05    # uniform head is ~1%
+    assert head_mass(zipf) > 5 * head_mass(uni)
+
+
+def test_profile_output_dedup_idempotent():
+    """make_profile_tensor output is already deduplicated; a second
+    deduplicated() is the identity."""
+    t = make_profile_tensor("reddit", scale=1e-6, seed=2)
+    d = t.deduplicated()
+    assert d.nnz == t.nnz
+    np.testing.assert_array_equal(d.indices, t.indices)
+    np.testing.assert_array_equal(d.values, t.values)
