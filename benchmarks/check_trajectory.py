@@ -1,0 +1,109 @@
+"""Cross-PR perf-trajectory gate over two ``BENCH_mttkrp.json`` artifacts.
+
+    python -m benchmarks.check_trajectory OLD.json NEW.json [--tolerance 0.10]
+
+Compares only the DETERMINISTIC metrics — the ones that carry the perf
+claim on a CPU-only CI container (wall times there are noise):
+
+* per kernel grid point and variant: ``modelled_hbm_bytes`` must not grow
+  beyond the tolerance, and ``gather_free`` must never flip True -> False;
+* exchange: the modelled sweep volume must not grow beyond tolerance and
+  ``bf16_volume_ratio`` must stay ~half the fp32 wire volume;
+* epoch streaming: ``fits_equal`` / ``peak_within_budget`` must not flip
+  False, and ``bytes_streamed`` must not grow beyond tolerance.
+
+Sections (or grid points) are compared ONLY when present and non-None in
+BOTH artifacts with matching identifying parameters — a PR that adds,
+removes, or rescales a scenario changes the trajectory's shape, not its
+direction, and must not trip the gate. Exits 1 when any compared metric
+regressed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _grew(old: float, new: float, tol: float) -> bool:
+    return old > 0 and new > old * (1.0 + tol)
+
+
+def compare(old: dict, new: dict, tol: float) -> tuple[int, list[str]]:
+    """(number of metrics compared, list of regression messages)."""
+    checked = 0
+    failures: list[str] = []
+
+    old_pts = {(p["nmodes"], p["rank"], p["nnz"]): p
+               for p in old.get("points") or []}
+    for p in new.get("points") or []:
+        key = (p["nmodes"], p["rank"], p["nnz"])
+        q = old_pts.get(key)
+        if q is None:
+            continue
+        for var, nv in p.get("variants", {}).items():
+            ov = q.get("variants", {}).get(var)
+            if ov is None:
+                continue
+            checked += 1
+            ob, nb = ov["modelled_hbm_bytes"], nv["modelled_hbm_bytes"]
+            if _grew(ob, nb, tol):
+                failures.append(
+                    f"point {key} variant {var}: modelled_hbm_bytes "
+                    f"{ob} -> {nb} (+{nb / ob - 1:.1%} > {tol:.0%})")
+            if ov.get("gather_free") and not nv.get("gather_free"):
+                failures.append(f"point {key} variant {var}: gather_free "
+                                f"flipped True -> False")
+
+    oe, ne = old.get("exchange_overlap"), new.get("exchange_overlap")
+    if oe and ne and (oe.get("nnz"), oe.get("rank"), oe.get("devices")) == \
+            (ne.get("nnz"), ne.get("rank"), ne.get("devices")):
+        checked += 1
+        ob = oe["overlap"]["modelled_bytes"]
+        nb = ne["overlap"]["modelled_bytes"]
+        if _grew(ob, nb, tol):
+            failures.append(f"exchange modelled_bytes {ob} -> {nb} "
+                            f"(> {tol:.0%})")
+        orr, nr = oe["bf16_volume_ratio"], ne["bf16_volume_ratio"]
+        if _grew(orr, nr, tol):
+            failures.append(f"bf16_volume_ratio {orr:.3f} -> {nr:.3f} "
+                            f"(> {tol:.0%})")
+
+    os_, ns = old.get("stream_overlap"), new.get("stream_overlap")
+    if os_ and ns and (os_.get("nnz"), os_.get("sweeps")) == \
+            (ns.get("nnz"), ns.get("sweeps")):
+        checked += 1
+        for flag in ("fits_equal", "peak_within_budget"):
+            if os_.get(flag) and not ns.get(flag):
+                failures.append(f"stream_overlap.{flag} flipped "
+                                f"True -> False")
+        ob, nb = os_["bytes_streamed"], ns["bytes_streamed"]
+        if _grew(ob, nb, tol):
+            failures.append(f"stream_overlap bytes_streamed {ob} -> {nb} "
+                            f"(> {tol:.0%})")
+
+    return checked, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when NEW regresses OLD's deterministic metrics")
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional growth (default 0.10)")
+    args = ap.parse_args(argv)
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    checked, failures = compare(old, new, args.tolerance)
+    for msg in failures:
+        print(f"REGRESSION: {msg}")
+    print(f"trajectory: {checked} comparable metric groups, "
+          f"{len(failures)} regressions (tolerance {args.tolerance:.0%})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -197,12 +197,43 @@ class ExchangeConfig:
 
 @dataclasses.dataclass(frozen=True)
 class RuntimeConfig:
-    """Execution environment: devices, fault tolerance, convergence."""
+    """Execution environment: devices, fault tolerance, convergence.
+
+    ``streaming=True`` selects epoch-streaming execution: each mode's sweep
+    iterates over budget-sized super-shards of an out-of-core
+    (:class:`~repro.store.TensorStore`-backed) plan instead of one resident
+    shard, double-buffering host→device transfers behind compute.
+    ``memory_budget`` is the per-device byte budget for streamed tensor
+    arrays (required when streaming; factors/accumulators are not counted —
+    they are O(rows·R), not O(nnz)). ``stream_buffers`` is the number of
+    super-shards concurrently resident per device (2 = double buffering;
+    1 = synchronous, no overlap). ``stream_spill`` keeps the packed arrays
+    of each super-shard window in an on-disk cache after its first build:
+    tensor data is sweep-invariant, so sweeps 2+ replay a sequential read
+    + ``device_put`` instead of re-ranking chunks — the chunk-scan cost is
+    paid once, as preprocessing (disk footprint ≈ total shard bytes;
+    ``stream_spill_dir`` overrides the temp location).
+    """
 
     num_devices: int | None = None  # None = all visible devices
     checkpoint_dir: str | None = None
     tol: float = 1e-5               # |fit_k - fit_{k-1}| < tol stops the run
     seed: int = 0
+    streaming: bool = False         # epoch-streaming super-shard execution
+    memory_budget: int | None = None  # per-device streamed bytes (streaming)
+    stream_buffers: int = 2         # resident super-shards (2 = double buf)
+    stream_spill: bool = True       # on-disk window cache across sweeps
+    stream_spill_dir: str | None = None  # spill location (None = tempdir)
+
+    def __post_init__(self):
+        # field-local checks only: streaming's cross-field requirement
+        # (memory_budget set) is enforced at compile() so dotted overrides
+        # can set the two fields in either order
+        if self.memory_budget is not None and self.memory_budget < 1:
+            raise ValueError("runtime.memory_budget must be a positive "
+                             "byte count")
+        if self.stream_buffers < 1:
+            raise ValueError("runtime.stream_buffers must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -34,7 +34,9 @@ from repro.core.partition import CPPlan
 
 __all__ = ["ALSState", "init_factors", "make_mode_update",
            "make_sweep_updates", "als_sweep", "fit_from_stats",
-           "unpad_factors"]
+           "unpad_factors", "StreamingModeUpdate",
+           "make_streaming_mode_update", "make_streaming_sweep_updates",
+           "als_streaming_sweep"]
 
 
 @dataclasses.dataclass
@@ -111,6 +113,126 @@ def make_sweep_updates(plan: CPPlan, mesh: Mesh, **mttkrp_kw) -> list[Callable]:
     async-dispatch pipelining the shard streamer applies to H2D transfers."""
     return [make_mode_update(plan, d, mesh, **mttkrp_kw)
             for d in range(plan.nmodes)]
+
+
+# -- epoch streaming: super-shard partial accumulation ------------------------
+
+_STREAM_KERNEL_KEYS = ("use_kernel", "variant", "num_buffers", "interpret")
+_STREAM_EXCHANGE_KEYS = ("ring", "exchange_spec")
+_STREAM_AXIS_KEYS = ("group_axes", "sub_axis")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingModeUpdate:
+    """The jitted triple one mode's epoch-streaming update runs:
+    ``init_acc()`` → ``accumulate(acc, dev, factors)`` per super-shard →
+    ``finish(f_old, acc, other_factors, grams)``. ``accumulate`` compiles
+    once per mode (all super-shards share the stream plan's static shapes)
+    and is where transfer overlap pays off: while it computes super-shard
+    k, the streamer's background thread places super-shard k+1."""
+
+    init_acc: Callable[[], jax.Array]
+    accumulate: Callable
+    finish: Callable
+
+
+def make_streaming_mode_update(plan: CPPlan, mode: int, mesh: Mesh, *,
+                               rank: int, **mttkrp_kw) -> StreamingModeUpdate:
+    """Streaming twin of :func:`make_mode_update`: the MTTKRP is split into
+    a per-super-shard partial accumulation (EC only, no collectives) and a
+    one-shot finish (merge + exchange + solve). Folding each super-shard's
+    masked EC into a zero accumulator reproduces the resident partial
+    bit-for-bit (tile-boundary splitting: every output row is computed by
+    exactly one super-shard), so fits match the resident path bitwise at
+    fp32. Takes the same ``mttkrp_kw`` as :func:`make_mode_update`."""
+    unknown = set(mttkrp_kw) - set(_STREAM_KERNEL_KEYS
+                                   + _STREAM_EXCHANGE_KEYS
+                                   + _STREAM_AXIS_KEYS)
+    if unknown:
+        raise TypeError(f"unknown mttkrp kwargs for streaming update: "
+                        f"{sorted(unknown)}")
+    axis_kw = {k: v for k, v in mttkrp_kw.items() if k in _STREAM_AXIS_KEYS}
+    kernel_kw = {k: v for k, v in mttkrp_kw.items()
+                 if k in _STREAM_KERNEL_KEYS}
+    finish_kw = {k: v for k, v in mttkrp_kw.items()
+                 if k in _STREAM_EXCHANGE_KEYS}
+    part = plan.modes[mode]
+    n = plan.nmodes
+    pfn = dmttkrp.make_partial_mttkrp_fn(part, mesh, **axis_kw, **kernel_kw)
+    ffn = dmttkrp.make_streaming_finish_fn(part, mesh, **axis_kw,
+                                           **finish_kw)
+
+    def init_acc():
+        return dmttkrp.zero_partials(part, mesh, rank, **axis_kw)
+
+    def accumulate(acc, dev, factors: Sequence[jax.Array]):
+        return pfn(acc, dev, list(factors))
+
+    def finish(f_old: jax.Array, acc, other_factors: Sequence[jax.Array],
+               grams: Sequence[jax.Array]):
+        m = ffn(acc)                                       # (padded_d, R)
+        v = functools.reduce(
+            lambda a, b: a * b,
+            [grams[w] for w in range(n) if w != mode])     # (R, R)
+        f_new = m @ _pinv_psd(v)
+        lam = jnp.linalg.norm(f_new, axis=0)
+        lam = jnp.where(lam > 0, lam, 1.0)
+        f_new = f_new / lam[None, :]
+        g_new = f_new.T @ f_new
+        return f_new, g_new, m, lam
+
+    donate = jax.default_backend() != "cpu"
+    return StreamingModeUpdate(
+        init_acc=init_acc,
+        accumulate=jax.jit(accumulate,
+                           donate_argnums=(0,) if donate else ()),
+        finish=jax.jit(finish, donate_argnums=(0,) if donate else ()),
+    )
+
+
+def make_streaming_sweep_updates(plan: CPPlan, mesh: Mesh, *, rank: int,
+                                 **mttkrp_kw) -> list[StreamingModeUpdate]:
+    """One :func:`make_streaming_mode_update` per mode — what
+    :class:`repro.api.CPSolver` owns in streaming mode."""
+    return [make_streaming_mode_update(plan, d, mesh, rank=rank, **mttkrp_kw)
+            for d in range(plan.nmodes)]
+
+
+def als_streaming_sweep(plan: CPPlan, mesh: Mesh, streamer, stream_plans,
+                        state: ALSState,
+                        updates: Sequence[StreamingModeUpdate]) -> ALSState:
+    """One full epoch-streaming sweep: per mode, iterate that mode's
+    super-shards through the double-buffered streamer, folding each
+    partial MTTKRP into the accumulator, then merge/exchange/solve once.
+    Fits are bitwise identical to :func:`als_sweep` on the resident shards.
+
+    ``streamer.get(d, k)`` returns super-shard k's arrays and dispatches
+    k+1's host→device transfer in the background — the enqueued
+    ``accumulate`` compute is what hides it. The host only blocks when a
+    transfer outlives the compute it was hidden behind (recorded by the
+    streamer as exposed time)."""
+    n = plan.nmodes
+    factors, grams = list(state.factors), list(state.grams)
+    m_last = f_last = lam = None
+    for d in range(n):
+        upd = updates[d]
+        acc = upd.init_acc()
+        for k in range(stream_plans[d].num_shards):
+            dev = streamer.get(d, k)
+            acc = upd.accumulate(acc, dev, factors)
+            # double-buffer barrier: shard k+1's compute data-depends on
+            # this accumulator, so waiting costs the pipeline nothing —
+            # and it keeps the streamer's exposed-time metric honest
+            # (time get() blocks = transfer NOT hidden behind compute,
+            # rather than host queue-ahead racing the async dispatch)
+            jax.block_until_ready(acc)
+        others = [factors[w] for w in range(n) if w != d]
+        f_d, g_d, m_d, lam = upd.finish(factors[d], acc, others, grams)
+        factors[d], grams[d] = f_d, g_d
+        m_last, f_last = m_d, f_d
+    fit = fit_from_stats(plan.norm, m_last, f_last, lam, grams)
+    return ALSState(factors=factors, lam=lam, grams=grams,
+                    sweep=state.sweep + 1, fits=state.fits + [fit])
 
 
 def fit_from_stats(norm_x: float, m_last, f_last, lam, grams) -> jax.Array:

@@ -33,7 +33,8 @@ from repro.core.partition import CPPlan, ModePartition
 from repro.kernels import ops as kops
 
 __all__ = ["DeviceArrays", "cp_mesh", "shard_plan_mode", "distributed_mttkrp",
-           "make_mttkrp_fn"]
+           "make_mttkrp_fn", "shard_super_shard", "zero_partials",
+           "make_partial_mttkrp_fn", "make_streaming_finish_fn"]
 
 
 @jax.tree_util.register_dataclass
@@ -215,6 +216,172 @@ def make_mttkrp_fn(
         )
         return shmap(dev.indices, dev.values, dev.local_rows,
                      dev.block_to_tile, dev.tile_visited, *factors)
+
+    return fn
+
+
+# -- epoch streaming: super-shard partial accumulation ------------------------
+
+def shard_super_shard(part, stream_plan, k: int, mesh: Mesh, *, spill=None,
+                      group_axes=("group",), sub_axis="sub") -> DeviceArrays:
+    """Place super-shard ``k`` of an out-of-core mode on the mesh.
+
+    Unlike :func:`shard_plan_mode`, ALL five arrays are per-device here —
+    the blocking metadata (``block_to_tile``/``tile_visited``) differs per
+    tile window, not just the payload. Shapes are the stream plan's static
+    caps, so every super-shard of a mode hits the same compiled update.
+    Devices whose window list is exhausted get empty ``(0, 0)`` windows:
+    pure padding, exact no-ops under the tile mask.
+
+    ``spill`` (a :class:`~repro.sparse.stream.WindowSpill`) short-circuits
+    the chunk-scan materialization with the window's on-disk copy from an
+    earlier sweep; non-empty windows built fresh are saved back. Empty pad
+    windows are never spilled — rebuilding them is pure allocation.
+    """
+    g, r = part.n_groups, part.r
+    sp = stream_plan
+    names = ("indices", "values", "local_rows", "block_to_tile",
+             "tile_visited")
+    shapes = {
+        "indices": ((g, r, sp.nnz_cap, part.nmodes), 2),
+        "values": ((g, r, sp.nnz_cap), 1),
+        "local_rows": ((g, r, sp.nnz_cap), 1),
+        "block_to_tile": ((g, r, sp.nblocks), 1),
+        "tile_visited": ((g, r, sp.n_tiles), 1),
+    }
+    shardings = {
+        n: NamedSharding(mesh, P(group_axes, sub_axis, *([None] * tr)))
+        for n, (_, tr) in shapes.items()}
+    bufs: dict[str, list] = {n: [] for n in names}
+    dev_map = shardings["values"].devices_indices_map(shapes["values"][0])
+    for device, idx in dev_map.items():
+        gg = idx[0].start or 0
+        ss = idx[1].start or 0
+        dev_id = gg * r + ss
+        t0, t1 = sp.windows[dev_id][k]
+        skey = (k, t0, t1, sp.nnz_cap, sp.nblocks)
+        arrs = (spill.load(part.mode, dev_id, skey)
+                if spill is not None else None)
+        if arrs is None:
+            arrs = part.super_shard_arrays(dev_id, t0, t1,
+                                           nnz_cap=sp.nnz_cap,
+                                           nblocks=sp.nblocks)
+            if spill is not None and t1 > t0:
+                spill.save(part.mode, dev_id, skey, arrs)
+        for name, a in zip(names, arrs):
+            bufs[name].append(jax.device_put(a[None, None], device))
+        del arrs  # host copy freed before the next device streams
+    return DeviceArrays(**{
+        n: jax.make_array_from_single_device_arrays(
+            shapes[n][0], shardings[n], bufs[n])
+        for n in names})
+
+
+def zero_partials(part, mesh: Mesh, rank: int, *, group_axes=("group",),
+                  sub_axis="sub") -> jax.Array:
+    """Zero per-device MTTKRP accumulator, (G, r, rows_max, R) sharded one
+    block per device — the running sum super-shard partials fold into."""
+    sh = NamedSharding(mesh, P(group_axes, sub_axis, None, None))
+    return jax.device_put(
+        jnp.zeros((part.n_groups, part.r, part.rows_max, rank), jnp.float32),
+        sh)
+
+
+def make_partial_mttkrp_fn(
+    part,
+    mesh: Mesh,
+    *,
+    group_axes: tuple[str, ...] = ("group",),
+    sub_axis: str = "sub",
+    use_kernel: bool = True,
+    variant: str | None = None,
+    num_buffers: int = 2,
+    interpret: bool | None = None,
+):
+    """Jit-able ``fn(acc, dev, factors) -> acc`` folding one super-shard's
+    local EC into the per-device accumulator — no merge, no gather.
+
+    Because super-shards split at tile boundaries, each output row is
+    produced by exactly ONE super-shard's EC call, with unchanged block and
+    slot order; all other super-shards contribute an exact float zero
+    there. Accumulating into a zero-initialized ``acc`` therefore yields
+    the resident single-call partial bit-for-bit, and the downstream
+    merge/gather (:func:`make_streaming_finish_fn`) is byte-identical to
+    the resident path's.
+    """
+    meta = dict(mode=part.mode, rows_max=part.rows_max, tile=part.tile,
+                block_p=part.block_p)
+
+    def local_fn(acc, indices, values, local_rows, block_to_tile,
+                 tile_visited, *factors):
+        acc = acc.reshape(acc.shape[-2:])
+        indices = indices.reshape(indices.shape[-2:])
+        values = values.reshape(values.shape[-1])
+        local_rows = local_rows.reshape(local_rows.shape[-1])
+        block_to_tile = block_to_tile.reshape(block_to_tile.shape[-1])
+        tile_visited = tile_visited.reshape(tile_visited.shape[-1])
+        partial = _local_ec(meta, indices, values, local_rows, block_to_tile,
+                            tile_visited, list(factors),
+                            use_kernel=use_kernel, variant=variant,
+                            num_buffers=num_buffers, interpret=interpret)
+        return (acc + partial)[None, None]
+
+    acc_spec = P(group_axes, sub_axis, None, None)
+    arr_specs = (
+        P(group_axes, sub_axis, None, None),
+        P(group_axes, sub_axis, None),
+        P(group_axes, sub_axis, None),
+        P(group_axes, sub_axis, None),
+        P(group_axes, sub_axis, None),
+    )
+
+    def fn(acc: jax.Array, dev: DeviceArrays,
+           factors: Sequence[jax.Array]) -> jax.Array:
+        f_specs = tuple(P(None, None) for _ in factors)
+        shmap = shard_map(
+            local_fn,
+            mesh=mesh,
+            in_specs=(acc_spec,) + arr_specs + f_specs,
+            out_specs=acc_spec,
+        )
+        return shmap(acc, dev.indices, dev.values, dev.local_rows,
+                     dev.block_to_tile, dev.tile_visited, *factors)
+
+    return fn
+
+
+def make_streaming_finish_fn(
+    part,
+    mesh: Mesh,
+    *,
+    group_axes: tuple[str, ...] = ("group",),
+    sub_axis: str = "sub",
+    ring: bool | None = None,
+    exchange_spec: comm.ExchangeSpec | None = None,
+):
+    """Jit-able ``fn(acc) -> (padded_rows, R)``: the merge (intra-group
+    reduce-scatter for r>1) + exchange of :func:`make_mttkrp_fn`, run ONCE
+    on the accumulated super-shard partials. Same collectives, same
+    schedule, same wire dtype as the resident path."""
+    all_axes = tuple(group_axes) + (sub_axis,)
+    if exchange_spec is None:
+        exchange_spec = comm.ExchangeSpec(
+            variant=comm.resolve_variant(None, ring))
+
+    def local_fn(acc):
+        acc = acc.reshape(acc.shape[-2:])
+        merged = comm.merge_partials(
+            acc, sub_axis if part.r > 1 else None,
+            **exchange_spec.merge_kwargs())
+        return comm.all_gather_axes(merged, all_axes,
+                                    **exchange_spec.gather_kwargs())
+
+    acc_spec = P(group_axes, sub_axis, None, None)
+
+    def fn(acc: jax.Array) -> jax.Array:
+        shmap = shard_map(local_fn, mesh=mesh, in_specs=(acc_spec,),
+                          out_specs=P(None, None))
+        return shmap(acc)
 
     return fn
 

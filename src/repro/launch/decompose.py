@@ -10,6 +10,8 @@
         --set partition.strategy=equal_nnz --rebalance   # dynamic scheduler
     PYTHONPATH=src python -m repro.launch.decompose --preset paper \
         --store tensor.store --plan-cache plans/   # out-of-core ingest path
+    PYTHONPATH=src python -m repro.launch.decompose --preset paper \
+        --store tensor.store --stream --memory-budget-mb 64   # epoch streaming
 
 Runs the staged repro.api pipeline and reports preprocessing (plan) time
 separately from execution time, the way the paper does — pass --plan-cache
@@ -71,6 +73,15 @@ def main():
     ap.add_argument("--exchange-report", action="store_true",
                     help="print per-sweep modelled vs HLO-measured exchange "
                          "volume for the resolved exchange spec")
+    ap.add_argument("--stream", action="store_true",
+                    help="epoch-streaming execution: each mode's sweep "
+                         "iterates over budget-sized super-shards with "
+                         "double-buffered host-to-device transfer "
+                         "(requires --store and --memory-budget-mb)")
+    ap.add_argument("--memory-budget-mb", type=float, default=None,
+                    metavar="MB",
+                    help="per-device memory budget for --stream, in MiB "
+                         "(covers all stream buffers of one mode shard)")
     args = ap.parse_args()
 
     import repro.api as api
@@ -85,6 +96,12 @@ def main():
         cfg = cfg.with_overrides({"schedule.rebalance": "on"})
     elif args.measure_balance:
         cfg = cfg.with_overrides({"schedule.rebalance": "measure"})
+    if args.stream:
+        overrides = {"runtime.streaming": True}
+        if args.memory_budget_mb is not None:
+            overrides["runtime.memory_budget"] = \
+                int(args.memory_budget_mb * 2 ** 20)
+        cfg = cfg.with_overrides(overrides)
     cfg = api.apply_set_args(cfg, args.set_args)
 
     if args.store is not None:
@@ -163,6 +180,23 @@ def main():
             print(f"  mode {mode}: modelled {row['total_bytes']} B "
                   f"(gather {row['gather_bytes']} + merge "
                   f"{row['merge_bytes']}) | measured {m_meas:.0f} B")
+
+    ov = solver.overlap_report()
+    if ov.get("enabled"):
+        print(f"streaming: budget {ov['budget_bytes'] / 2**20:.1f} MiB/dev "
+              f"x{ov['buffers']} buffers | shards/mode "
+              f"{ov['shards_per_mode']} | peak resident "
+              f"{ov['peak_resident_bytes'] / 2**20:.1f} MiB | "
+              f"{ov['bytes_streamed'] / 2**20:.1f} MiB streamed "
+              f"({ov['builds']} builds, {ov['cold_builds']} cold)")
+        steady = ov["overlap_fraction_steady"]
+        print(f"  transfer {ov['transfer_s']:.2f}s | hidden "
+              f"{ov['hidden_s']:.2f}s | exposed {ov['exposed_s']:.2f}s | "
+              f"overlap {ov['overlap_fraction']:.1%}"
+              + (f" (steady {steady:.1%})" if steady is not None else ""))
+        if ov["spill_saves"] or ov["spill_hits"]:
+            print(f"  window spill: {ov['spill_saves']} saved, "
+                  f"{ov['spill_hits']} replayed")
     solver.close()
 
 

@@ -25,6 +25,16 @@ rebalance points, EWMA-smoothed across sweeps (:class:`EwmaCostModel`).
 Exchange volume (:func:`exchange_bytes`) models the per-mode communication a
 replication choice ``r`` implies: the intra-group reduce-scatter plus the
 inter-group all-gather of the padded output factor (paper Algorithm 3).
+
+Under epoch streaming (``runtime.streaming``) a device additionally pays a
+host→device transfer per mode epoch proportional to its shard bytes;
+:func:`device_stream_bytes` models that volume per device and the
+``sec_per_h2d_byte`` coefficient converts it to time (0.0 by default — the
+resident path transfers nothing per sweep). The H2D coefficient is *not*
+part of the calibrated feature set (``as_array`` stays the 3-feature EC
+model); it is set explicitly by streaming-aware callers so the rebalancer
+stops seeing a migration as free when it grows a budget-bound member's
+streamed bytes.
 """
 from __future__ import annotations
 
@@ -35,7 +45,7 @@ import numpy as np
 __all__ = [
     "CostCoefficients", "DEFAULT_COEFFS", "index_work", "device_features",
     "predict_times", "fit_coefficients", "EwmaCostModel", "exchange_bytes",
-    "mode_cost_summary",
+    "device_stream_bytes", "mode_cost_summary",
 ]
 
 
@@ -43,10 +53,12 @@ __all__ = [
 class CostCoefficients:
     """Linear EC-time model coefficients (seconds per unit)."""
 
-    sec_per_nnz: float = 1.0    # per true nonzero
-    sec_per_slot: float = 0.0   # per executed kernel slot (incl. padding)
-    sec_per_row: float = 0.0    # per owned output index (static policies)
-    sec_fixed: float = 0.0      # per-launch constant
+    sec_per_nnz: float = 1.0         # per true nonzero
+    sec_per_slot: float = 0.0        # per executed kernel slot (incl. padding)
+    sec_per_row: float = 0.0         # per owned output index (static policies)
+    sec_fixed: float = 0.0           # per-launch constant
+    sec_per_h2d_byte: float = 0.0    # per streamed host→device byte (epoch
+    #                                  streaming only; not calibrated)
 
     def as_array(self) -> np.ndarray:
         return np.array([self.sec_per_nnz, self.sec_per_slot, self.sec_fixed],
@@ -73,10 +85,26 @@ def device_features(part) -> np.ndarray:
     return np.stack([nnz, slots, np.ones_like(nnz)], axis=1)
 
 
-def predict_times(part, coeffs: CostCoefficients = DEFAULT_COEFFS
-                  ) -> np.ndarray:
-    """Modelled per-device EC time for one mode, (m,) float64."""
-    return device_features(part) @ coeffs.as_array()
+def device_stream_bytes(part, nmodes: int) -> np.ndarray:
+    """(m,) host→device bytes each device streams for one mode epoch: its
+    executed slots' index/value/row payload plus the block map and the tile
+    mask (the same accounting as ``repro.store.plan.stream_shard_nbytes``,
+    but per device at its true block count instead of the padded cap)."""
+    slots = np.asarray(part.blocks_true, np.float64) * float(part.block_p)
+    blocks = np.asarray(part.blocks_true, np.float64)
+    n_tiles = part.rows_max // part.tile
+    return slots * (4 * nmodes + 8) + blocks * 4 + float(n_tiles * 4)
+
+
+def predict_times(part, coeffs: CostCoefficients = DEFAULT_COEFFS, *,
+                  nmodes: int | None = None) -> np.ndarray:
+    """Modelled per-device EC time for one mode, (m,) float64. With
+    ``nmodes`` given and a nonzero ``sec_per_h2d_byte``, adds the epoch-
+    streaming transfer term (exposed H2D time per device)."""
+    t = device_features(part) @ coeffs.as_array()
+    if nmodes is not None and coeffs.sec_per_h2d_byte > 0:
+        t = t + coeffs.sec_per_h2d_byte * device_stream_bytes(part, nmodes)
+    return t
 
 
 def fit_coefficients(feats: np.ndarray, times: np.ndarray
@@ -113,7 +141,10 @@ class EwmaCostModel:
     def update(self, feats: np.ndarray, times: np.ndarray) -> CostCoefficients:
         new = fit_coefficients(feats, times)
         if not self.calibrated:
-            self.coeffs = new          # first measurement replaces the prior
+            # first measurement replaces the prior — except the H2D term,
+            # which is never in the calibration features (set explicitly)
+            self.coeffs = dataclasses.replace(
+                new, sec_per_h2d_byte=self.coeffs.sec_per_h2d_byte)
             self.calibrated = True
         else:
             a = self.alpha
@@ -124,11 +155,12 @@ class EwmaCostModel:
                 + (1 - a) * self.coeffs.sec_per_slot,
                 sec_per_row=self.coeffs.sec_per_row,
                 sec_fixed=a * new.sec_fixed + (1 - a) * self.coeffs.sec_fixed,
+                sec_per_h2d_byte=self.coeffs.sec_per_h2d_byte,
             )
         return self.coeffs
 
-    def predict(self, part) -> np.ndarray:
-        return predict_times(part, self.coeffs)
+    def predict(self, part, *, nmodes: int | None = None) -> np.ndarray:
+        return predict_times(part, self.coeffs, nmodes=nmodes)
 
 
 def exchange_bytes(part, rank: int, *, dtype_bytes: int = 4) -> int:
@@ -145,15 +177,22 @@ def exchange_bytes(part, rank: int, *, dtype_bytes: int = 4) -> int:
 
 
 def mode_cost_summary(part, rank: int,
-                      coeffs: CostCoefficients = DEFAULT_COEFFS) -> dict:
+                      coeffs: CostCoefficients = DEFAULT_COEFFS, *,
+                      nmodes: int | None = None) -> dict:
     """Human/JSON-facing cost breakdown for one mode: modelled per-device
-    times, their imbalance (max/mean), and the exchange volume."""
-    t = predict_times(part, coeffs)
+    times, their imbalance (max/mean), and the exchange volume. With
+    ``nmodes``, adds the per-device epoch-streaming H2D volume (and its time
+    contribution to ``modelled_times`` when ``sec_per_h2d_byte`` is set)."""
+    t = predict_times(part, coeffs, nmodes=nmodes)
     mean = float(t.mean()) if t.size else 0.0
-    return {
+    out = {
         "mode": int(part.mode),
         "modelled_times": [float(x) for x in t],
         "modelled_imbalance": float(t.max() / mean) if mean > 0 else 1.0,
         "exchange_bytes_per_device": exchange_bytes(part, rank),
         "padding_frac": float(part.balance_stats()["padding_frac"]),
     }
+    if nmodes is not None:
+        out["stream_bytes_per_device"] = [
+            int(x) for x in device_stream_bytes(part, nmodes)]
+    return out

@@ -158,7 +158,9 @@ def measure_mode_device_times(part, factors: Sequence[jax.Array],
 # -- migration planning ------------------------------------------------------
 
 def plan_group_migrations(part, times: np.ndarray, *,
-                          migration_budget: float) -> list[GroupMigration]:
+                          migration_budget: float,
+                          max_member_nnz: int | None = None
+                          ) -> list[GroupMigration]:
     """Convert one mode's measured member times into block-granular nnz
     re-splits, one :class:`GroupMigration` per group that should move work.
 
@@ -166,6 +168,15 @@ def plan_group_migrations(part, times: np.ndarray, *,
     proportional to throughput (equalizing predicted time), blended toward
     the current split so no more than ``migration_budget`` of the group's
     nonzeros move in one event, then rounded to whole ``block_p`` blocks.
+
+    ``max_member_nnz`` is the epoch-streaming budget clamp: no member's
+    target may exceed it (floored to a block multiple) — a budget-exhausted
+    device must not receive migrated nonzeros it has no streamed-slot room
+    for. Overflow is redistributed to members with headroom; a group whose
+    total headroom cannot absorb it keeps its current split. The clamp
+    bounds *true* nnz (blocked-layout padding may still exceed it);
+    :func:`apply_rebalance`'s ``nnz_max`` headroom check stays the hard
+    shape guarantee.
     """
     out: list[GroupMigration] = []
     r, p = part.r, part.block_p
@@ -204,6 +215,21 @@ def plan_group_migrations(part, times: np.ndarray, *,
             j = int(np.argmin(target))
             target[j] += p
             target[int(np.argmax(target))] -= p
+        if max_member_nnz is not None:
+            cap = (int(max_member_nnz) // p) * p
+            excess = np.maximum(target - cap, 0.0)
+            if excess.sum() > 0:
+                head = np.maximum(cap - target, 0.0)
+                if head.sum() < excess.sum():
+                    continue     # budget cannot absorb the overflow anywhere
+                target = np.minimum(target, cap)
+                rem = excess.sum()
+                for j in np.argsort(-head):
+                    take = min(rem, head[j])   # block multiples throughout
+                    target[j] += take
+                    rem -= take
+                    if rem <= 0:
+                        break
         if (target < 0).any() or np.array_equal(target, n):
             continue
         out.append(GroupMigration(
@@ -350,13 +376,17 @@ class Rebalancer:
     def __init__(self, *, imbalance_threshold: float = 1.2,
                  migration_budget: float = 0.25, ewma_alpha: float = 0.5,
                  probe_repeats: int = 1, kernel_kw: dict | None = None,
-                 migrate: bool = True):
+                 migrate: bool = True,
+                 member_nnz_caps: dict[int, int] | int | None = None):
         self.imbalance_threshold = float(imbalance_threshold)
         self.migration_budget = float(migration_budget)
         self.alpha = float(ewma_alpha)
         self.probe_repeats = int(probe_repeats)
         self.kernel_kw = kernel_kw
         self.migrate = migrate
+        # per-mode (or uniform) streamed-slot budget: migrations never push
+        # a member's nnz above its cap (plan_group_migrations clamp)
+        self.member_nnz_caps = member_nnz_caps
         self.cost_model = cost_mod.EwmaCostModel(alpha=self.alpha)
         self.ewma_times: dict[int, np.ndarray] = {}
         self.events: list[dict] = []
@@ -392,9 +422,12 @@ class Rebalancer:
             for mode, part in enumerate(plan.modes):
                 if part.r > 1 and \
                         imbalance[mode] > self.imbalance_threshold:
+                    caps = self.member_nnz_caps
+                    cap = caps.get(mode) if isinstance(caps, dict) else caps
                     migrations.extend(plan_group_migrations(
                         part, self.ewma_times[mode],
-                        migration_budget=self.migration_budget))
+                        migration_budget=self.migration_budget,
+                        max_member_nnz=cap))
         decision = ReplanDecision(
             epoch=plan.rebalance_epoch, sweep=int(sweep),
             triggered=bool(migrations),

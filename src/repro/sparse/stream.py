@@ -6,102 +6,328 @@ same pattern applies when the tensor exceeds aggregate HBM: shards for mode
 d+1 are prefetched while mode d computes — compute/transfer overlap the
 paper leaves implicit.
 
-``ShardStreamer`` owns the host-resident :class:`CPPlan` and yields
-device-resident :class:`DeviceArrays` per mode, keeping at most
-``prefetch+1`` modes resident (counting in-flight prefetches). Prefetch is
-*actually* asynchronous: ``get(d)`` dispatches mode d+1's ``device_put`` on
-a background thread and returns immediately with mode d's arrays — the host
-only blocks on a prefetch when that mode is itself requested. Eviction is
-LRU over resident modes.
+Two streamers share one residency engine (:class:`_StreamerBase`):
 
-The dynamic rebalancer (:mod:`repro.schedule.rebalance`) swaps migrated
-modes in-place via :meth:`update_plan`: the stale shards are dropped and the
-migrated modes' new shards prefetched in the background (pending prefetches
-against the outgoing plan are cancelled first), so the sweep after a
-rebalance point pays no synchronous re-placement.
+* :class:`ShardStreamer` — one key per MODE, whole resident shards. Owns
+  the host-resident :class:`CPPlan` and yields device-resident
+  :class:`DeviceArrays` per mode; the dynamic rebalancer swaps migrated
+  modes in-place via :meth:`~ShardStreamer.update_plan`.
+* :class:`SuperShardStreamer` — one key per ``(mode, super_shard)`` of an
+  out-of-core plan's :class:`~repro.store.ModeStreamPlan` split: epoch
+  streaming, where a mode's sweep iterates over budget-sized tile windows
+  and super-shard k+1's ``device_put`` overlaps super-shard k's compute.
+  The prefetch wraps across modes (last shard of mode d prefetches shard 0
+  of mode d+1 — tensor data is sweep-invariant, so the wrap across the
+  sweep boundary is valid too).
+
+Residency is bounded by ``prefetch + 1`` keys AT EVERY INSTANT, counting
+in-flight prefetches (their ``device_put`` holds device memory too): room
+is made BEFORE a load or dispatch adds a key, LRU residents are evicted
+first, then superseded pending prefetches are cancelled (or, when already
+executing, settled and discarded). Prefetch is *actually* asynchronous:
+``get`` dispatches the next key's ``device_put`` on a background thread
+and returns immediately; the host only blocks on a prefetch when that key
+is itself requested — and the time it does block is recorded as EXPOSED
+transfer time, the complement of the overlap the double buffering buys
+(see :meth:`_StreamerBase.stats_snapshot`).
 
 A streamer owns a background executor and must be shut down:
 :meth:`close` cancels queued prefetches, joins any in-flight one (so no
 background ``device_put`` outlives the streamer and touches a freed plan),
-and releases all shard references. ``ShardStreamer`` is a context manager;
+and releases all shard references. Streamers are context managers;
 :class:`repro.api.CPSolver` forwards its own ``close()`` here.
 """
 from __future__ import annotations
 
+import os
+import shutil
+import tempfile
+import threading
+import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Iterable
+from typing import Hashable, Iterable
 
+import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.mttkrp import DeviceArrays, shard_plan_mode
+from repro.core.mttkrp import (DeviceArrays, shard_plan_mode,
+                               shard_super_shard)
 from repro.core.partition import CPPlan
 
-__all__ = ["ShardStreamer"]
+__all__ = ["ShardStreamer", "SuperShardStreamer", "WindowSpill"]
 
 
-class ShardStreamer:
-    def __init__(self, plan: CPPlan, mesh: Mesh, *, prefetch: int = 1,
-                 group_axes=("group",), sub_axis="sub"):
-        self.plan = plan
-        self.mesh = mesh
+class WindowSpill:
+    """On-disk cache of materialized super-shard windows.
+
+    Tensor data is sweep-invariant, so the packed host arrays of a
+    ``(mode, device, super_shard)`` window are identical every sweep — but
+    materializing one re-scans every overlapping store chunk and re-ranks
+    its arrivals. The spill pays that chunk-scan once, as preprocessing:
+    the first build of a window saves its five packed arrays; later sweeps
+    replay a sequential ``np.load`` + ``device_put``, which is what lets
+    steady-state transfers hide fully behind compute. Disk footprint ≈
+    total shard bytes — the out-of-core bound is HOST MEMORY, not disk.
+
+    With ``root=None`` the spill owns a fresh temp directory and removes
+    it on :meth:`close`; an explicit ``root`` persists across runs (the
+    preprocessing is reusable — cache keys carry the tile window, so a
+    plan split under a different budget misses cleanly and re-saves).
+    Writes go through a same-directory rename so a crashed run never
+    leaves a partial window behind.
+    """
+
+    _NAMES = ("indices", "values", "local_rows", "block_to_tile",
+              "tile_visited")
+
+    def __init__(self, root: str | None = None):
+        self._own = root is None
+        self.root = root if root is not None else tempfile.mkdtemp(
+            prefix="repro-window-spill-")
+        os.makedirs(self.root, exist_ok=True)
+        self.hits = 0
+        self.saves = 0
+
+    def _path(self, mode: int, dev: int, key) -> str:
+        # the key carries window AND static caps: the same tile window
+        # split under a different budget pads to different shapes
+        tag = "_".join(str(int(v)) for v in key)
+        return os.path.join(self.root, f"m{mode}_d{dev}_{tag}.npz")
+
+    def load(self, mode: int, dev: int, key):
+        """The window's packed arrays, or None on a cache miss. ``key`` is
+        ``(k, t0, t1, nnz_cap, nblocks)``."""
+        path = self._path(mode, dev, key)
+        if not os.path.exists(path):
+            return None
+        with np.load(path) as z:
+            arrs = tuple(z[n] for n in self._NAMES)
+        self.hits += 1
+        return arrs
+
+    def save(self, mode: int, dev: int, key, arrs) -> None:
+        path = self._path(mode, dev, key)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **dict(zip(self._NAMES, arrs)))
+        os.replace(tmp, path)
+        self.saves += 1
+
+    def close(self) -> None:
+        """Remove the spill directory iff this spill created it."""
+        if self._own:
+            shutil.rmtree(self.root, ignore_errors=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class _StreamerBase:
+    """Keyed bounded-residency prefetch engine over a single-thread
+    executor. Subclasses define :meth:`_build` (host→device placement of
+    one key) and :meth:`_key_nbytes` (per-device bytes a key holds, for
+    budget accounting)."""
+
+    def __init__(self, *, prefetch: int):
         self.prefetch = prefetch
-        self.group_axes = group_axes
-        self.sub_axis = sub_axis
-        self._resident: OrderedDict[int, DeviceArrays] = OrderedDict()
-        self._pending: OrderedDict[int, Future] = OrderedDict()
+        self._resident: OrderedDict[Hashable, DeviceArrays] = OrderedDict()
+        self._pending: OrderedDict[Hashable, Future] = OrderedDict()
         self._pool = ThreadPoolExecutor(max_workers=1,
                                         thread_name_prefix="shard-prefetch")
         self._closed = False
+        self._stats_lock = threading.Lock()
+        self._cur_bytes = 0
+        self.stats = {
+            "transfer_s": 0.0,       # builder wall time (host→device)
+            "exposed_s": 0.0,        # time the consumer blocked on a load
+            "builds": 0,
+            "cold_builds": 0,        # synchronous loads (no prefetch hit)
+            "bytes_streamed": 0,     # per-device bytes placed
+            "peak_resident_bytes": 0,  # per-device, counting in-flight keys
+        }
+
+    # -- subclass surface --------------------------------------------------
+    def _build(self, key) -> DeviceArrays:
+        raise NotImplementedError
+
+    def _key_nbytes(self, key) -> int:
+        return 0
+
+    # -- residency engine --------------------------------------------------
+    def _timed_build(self, key) -> DeviceArrays:
+        t0 = time.perf_counter()
+        arrays = self._build(key)
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self.stats["transfer_s"] += dt
+            self.stats["builds"] += 1
+            self.stats["bytes_streamed"] += self._key_nbytes(key)
+        return arrays
+
+    def _track_add(self, key) -> None:
+        self._cur_bytes += self._key_nbytes(key)
+        if self._cur_bytes > self.stats["peak_resident_bytes"]:
+            self.stats["peak_resident_bytes"] = self._cur_bytes
+
+    def _track_drop(self, key) -> None:
+        self._cur_bytes -= self._key_nbytes(key)
+
+    def _dispatch(self, key) -> None:
+        """Start moving ``key``'s shards to device without blocking."""
+        if self._closed:
+            raise RuntimeError(f"{type(self).__name__} is closed")
+        if key in self._resident or key in self._pending:
+            return
+        self._track_add(key)
+        self._pending[key] = self._pool.submit(self._timed_build, key)
+
+    def _wait(self, key) -> DeviceArrays:
+        """Block until ``key`` is resident (integrating a pending prefetch
+        or loading synchronously on a cold miss). Block time is recorded as
+        exposed transfer time — the part double buffering failed to hide."""
+        fut = self._pending.pop(key, None)
+        t0 = time.perf_counter()
+        if fut is not None:
+            self._resident[key] = fut.result()
+        elif key not in self._resident:
+            self._track_add(key)
+            self._resident[key] = self._timed_build(key)
+            with self._stats_lock:
+                self.stats["cold_builds"] += 1
+        else:
+            t0 = None
+        if t0 is not None:
+            with self._stats_lock:
+                self.stats["exposed_s"] += time.perf_counter() - t0
+        self._resident.move_to_end(key)
+        return self._resident[key]
+
+    def _evict(self, protect: frozenset | set = frozenset(),
+               reserve: int = 0) -> None:
+        """Make room: drop keys until resident + in-flight ≤
+        ``prefetch + 1 - reserve`` (``reserve`` slots are about to be
+        filled by the caller). LRU residents go first; then superseded
+        pending prefetches are cancelled — or, when already executing,
+        settled and discarded — so a fast consumer loop can never hold
+        more than the configured number of keys, even transiently."""
+        bound = self.prefetch + 1 - reserve
+
+        def over() -> bool:
+            return len(self._resident) + len(self._pending) > bound
+
+        while over():
+            victim = next((k for k in self._resident if k not in protect),
+                          None)
+            if victim is None:
+                break
+            arrays = self._resident.pop(victim)
+            self._track_drop(victim)
+            del arrays  # drop device references → frees HBM
+        while over():
+            stale = next((k for k in self._pending if k not in protect),
+                         None)
+            if stale is None:
+                break
+            self._settle(stale)
+
+    def _settle(self, key) -> None:
+        """Cancel ``key``'s pending prefetch, waiting it out when it is
+        already running (its result is dropped either way)."""
+        fut = self._pending.pop(key, None)
+        if fut is None:
+            return
+        self._track_drop(key)
+        if not fut.cancel():
+            try:
+                fut.result()
+            except Exception:  # noqa: BLE001 — a dying prefetch stays dead
+                pass
+
+    def _acquire(self, key, nxt) -> DeviceArrays:
+        """Shared ``get`` body: make room, load ``key``, prefetch ``nxt``.
+        Room for everything this call adds is made BEFORE anything is
+        added, so the ``prefetch + 1`` bound holds at every instant."""
+        if self._closed:
+            raise RuntimeError(f"{type(self).__name__} is closed")
+        will_prefetch = (self.prefetch > 0 and nxt is not None
+                         and nxt != key and nxt not in self._resident
+                         and nxt not in self._pending)
+        incoming = (0 if key in self._resident or key in self._pending
+                    else 1) + (1 if will_prefetch else 0)
+        protect = {key, nxt} if will_prefetch else {key}
+        self._evict(protect=protect, reserve=incoming)
+        cur = self._wait(key)
+        if will_prefetch:
+            self._dispatch(nxt)
+        return cur
+
+    def resident_keys(self) -> list:
+        """Keys currently holding (or acquiring) device memory, LRU
+        first."""
+        return list(self._resident) + list(self._pending)
+
+    def stats_snapshot(self) -> dict:
+        """Copy of the transfer counters — monotonic totals; callers diff
+        snapshots for per-sweep numbers. ``hidden_s`` is the transfer time
+        the prefetch overlapped behind compute."""
+        with self._stats_lock:
+            s = dict(self.stats)
+        s["hidden_s"] = max(s["transfer_s"] - s["exposed_s"], 0.0)
+        s["resident_bytes"] = self._cur_bytes
+        return s
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        """Shut down the prefetch executor: cancel queued futures, join the
+        in-flight one, drop every shard reference. Idempotent. After close,
+        :meth:`get` raises ``RuntimeError`` — a consumer outliving its
+        streamer is a bug, not a silent synchronous reload."""
+        if self._closed:
+            return
+        self._closed = True
+        for key in list(self._pending):
+            self._settle(key)
+        self._pool.shutdown(wait=True)
+        for key in list(self._resident):
+            self._resident.pop(key)
+            self._track_drop(key)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class ShardStreamer(_StreamerBase):
+    """Whole-shard-per-mode streamer (keys are mode ids)."""
+
+    def __init__(self, plan: CPPlan, mesh: Mesh, *, prefetch: int = 1,
+                 group_axes=("group",), sub_axis="sub"):
+        super().__init__(prefetch=prefetch)
+        self.plan = plan
+        self.mesh = mesh
+        self.group_axes = group_axes
+        self.sub_axis = sub_axis
 
     def _build(self, mode: int) -> DeviceArrays:
         return shard_plan_mode(self.plan.modes[mode], self.mesh,
                                group_axes=self.group_axes,
                                sub_axis=self.sub_axis)
 
-    def _dispatch(self, mode: int) -> None:
-        """Start moving ``mode``'s shards to device without blocking."""
-        if self._closed:
-            raise RuntimeError("ShardStreamer is closed")
-        if mode in self._resident or mode in self._pending:
-            return
-        self._pending[mode] = self._pool.submit(self._build, mode)
-
-    def _wait(self, mode: int) -> DeviceArrays:
-        """Block until ``mode`` is resident (integrating a pending prefetch
-        or loading synchronously on a cold miss)."""
-        fut = self._pending.pop(mode, None)
-        if fut is not None:
-            self._resident[mode] = fut.result()
-        elif mode not in self._resident:
-            self._resident[mode] = self._build(mode)
-        self._resident.move_to_end(mode)
-        return self._resident[mode]
-
-    def _evict(self) -> None:
-        """LRU-evict so resident + in-flight modes never exceed
-        ``prefetch + 1`` (in-flight arrays hold device memory too)."""
-        while len(self._resident) + len(self._pending) > self.prefetch + 1 \
-                and self._resident:
-            _, arrays = self._resident.popitem(last=False)
-            del arrays  # drop device references → frees HBM
-
     def resident_modes(self) -> list[int]:
         """Modes currently holding (or acquiring) device memory, LRU
         first."""
-        return list(self._resident) + list(self._pending)
+        return self.resident_keys()
 
     def get(self, mode: int) -> DeviceArrays:
         """Shards for ``mode``; dispatches an async prefetch of
         ``(mode+1) % nmodes`` before returning."""
-        if self._closed:
-            raise RuntimeError("ShardStreamer is closed")
-        cur = self._wait(mode)
-        nxt = (mode + 1) % self.plan.nmodes
-        if self.prefetch > 0 and nxt != mode:
-            self._dispatch(nxt)
-        self._evict()
-        return cur
+        return self._acquire(mode, (mode + 1) % self.plan.nmodes)
 
     def update_plan(self, plan: CPPlan,
                     modes: Iterable[int] | None = None) -> None:
@@ -116,7 +342,9 @@ class ShardStreamer:
         stale = set(range(self.plan.nmodes) if modes is None else modes)
         for mode in stale:
             self._settle(mode)
-            self._resident.pop(mode, None)
+            if mode in self._resident:
+                self._resident.pop(mode)
+                self._track_drop(mode)
         self.plan = plan
         for mode in sorted(stale):
             if len(self._resident) + len(self._pending) >= self.prefetch + 1:
@@ -124,34 +352,63 @@ class ShardStreamer:
             self._dispatch(mode)
         self._evict()
 
-    def _settle(self, mode: int) -> None:
-        """Cancel ``mode``'s pending prefetch, waiting it out when it is
-        already running (its result is dropped either way)."""
-        fut = self._pending.pop(mode, None)
-        if fut is None:
-            return
-        if not fut.cancel():
-            try:
-                fut.result()
-            except Exception:  # noqa: BLE001 — a dying prefetch stays dead
-                pass
 
-    # -- lifecycle ---------------------------------------------------------
+class SuperShardStreamer(_StreamerBase):
+    """Epoch streaming: keys are ``(mode, super_shard)`` pairs of an
+    out-of-core plan split by :func:`repro.store.split_mode_super_shards`.
+
+    ``buffers`` concurrently resident super-shards (2 = double buffering:
+    shard k+1's host→device transfer runs behind shard k's compute; the
+    residency bound is exactly ``buffers`` keys, so peak streamed device
+    bytes stay ≤ the budget the stream plans were split for). The prefetch
+    chain follows sweep order: (d, k) → (d, k+1), wrapping to
+    (d+1, 0) — and across the sweep boundary to (0, 0), which is valid
+    because tensor data is sweep-invariant."""
+
+    def __init__(self, plan: CPPlan, mesh: Mesh, stream_plans, *,
+                 buffers: int = 2, spill: WindowSpill | None = None,
+                 group_axes=("group",), sub_axis="sub"):
+        if buffers < 1:
+            raise ValueError("buffers must be >= 1")
+        super().__init__(prefetch=buffers - 1)
+        self.plan = plan
+        self.mesh = mesh
+        self.stream_plans = list(stream_plans)
+        self.spill = spill
+        self.group_axes = group_axes
+        self.sub_axis = sub_axis
+
+    def _build(self, key) -> DeviceArrays:
+        mode, k = key
+        return shard_super_shard(self.plan.modes[mode],
+                                 self.stream_plans[mode], k, self.mesh,
+                                 spill=self.spill,
+                                 group_axes=self.group_axes,
+                                 sub_axis=self.sub_axis)
+
+    def stats_snapshot(self) -> dict:
+        s = super().stats_snapshot()
+        if self.spill is not None:
+            s["spill_hits"] = self.spill.hits
+            s["spill_saves"] = self.spill.saves
+        return s
+
     def close(self) -> None:
-        """Shut down the prefetch executor: cancel queued futures, join the
-        in-flight one, drop every shard reference. Idempotent. After close,
-        :meth:`get` raises ``RuntimeError`` — a consumer outliving its
-        streamer is a bug, not a silent synchronous reload."""
-        if self._closed:
-            return
-        self._closed = True
-        for mode in list(self._pending):
-            self._settle(mode)
-        self._pool.shutdown(wait=True)
-        self._resident.clear()
+        super().close()
+        if self.spill is not None:
+            self.spill.close()
 
-    def __enter__(self) -> "ShardStreamer":
-        return self
+    def _key_nbytes(self, key) -> int:
+        return self.stream_plans[key[0]].shard_bytes
 
-    def __exit__(self, *exc) -> None:
-        self.close()
+    def _next_key(self, key):
+        mode, k = key
+        if k + 1 < self.stream_plans[mode].num_shards:
+            return (mode, k + 1)
+        return ((mode + 1) % self.plan.nmodes, 0)
+
+    def get(self, mode: int, k: int) -> DeviceArrays:
+        """Super-shard ``k`` of ``mode``; dispatches an async prefetch of
+        the next super-shard in sweep order before returning."""
+        key = (mode, k)
+        return self._acquire(key, self._next_key(key))

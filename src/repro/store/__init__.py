@@ -31,8 +31,10 @@ accept a :class:`SparseTensor`::
     result = api.compile(plan, cfg).run(10)
 """
 from repro.store.format import StoreFormatError
-from repro.store.plan import (OutOfCoreError, StoreModePartition,
-                              build_plan_from_store)
+from repro.store.plan import (ModeStreamPlan, OutOfCoreError,
+                              StoreModePartition, budget_slot_cap,
+                              build_plan_from_store, resident_shard_nbytes,
+                              split_mode_super_shards, stream_shard_nbytes)
 from repro.store.store import TensorStore
 from repro.store.writer import (StoreWriter, convert_tns,
                                 write_profile_store, write_store_from_coo)
@@ -41,4 +43,6 @@ __all__ = [
     "TensorStore", "StoreWriter", "StoreFormatError",
     "convert_tns", "write_store_from_coo", "write_profile_store",
     "OutOfCoreError", "StoreModePartition", "build_plan_from_store",
+    "ModeStreamPlan", "split_mode_super_shards", "stream_shard_nbytes",
+    "resident_shard_nbytes", "budget_slot_cap",
 ]

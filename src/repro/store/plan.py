@@ -29,6 +29,8 @@ device data go through ``device_arrays``/``materialize`` explicitly.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core import partition as partition_mod
@@ -37,7 +39,9 @@ from repro.schedule.static import auto_replication
 from repro.store.store import TensorStore
 
 __all__ = ["OutOfCoreError", "StoreModePartition", "build_plan_from_store",
-           "lazy_parts_from_layouts"]
+           "lazy_parts_from_layouts", "ModeStreamPlan",
+           "split_mode_super_shards", "stream_shard_nbytes",
+           "resident_shard_nbytes", "budget_slot_cap"]
 
 
 class OutOfCoreError(RuntimeError):
@@ -115,6 +119,9 @@ class StoreModePartition:
             dev_tc_pad.append(tc_pad)
             nnz_true[dev] = b1 - b0
             blocks_true[dev] = int(tc_pad.sum()) // block_p
+        # per-device per-tile PADDED slot counts — what the super-shard
+        # splitter packs against a memory budget (O(m · n_tiles))
+        self._dev_tc_pad = np.stack(dev_tc_pad)
 
         nnz_cap = max(int(max((tp.sum() for tp in dev_tc_pad), default=0)),
                       block_p)
@@ -197,75 +204,153 @@ class StoreModePartition:
         tensor, exactly the bound this subsystem exists to keep. r is small
         in practice (the paper scheme is r=1), so the extra passes cost
         r× chunk I/O, not memory."""
+        ind, val, rows, _, _ = self.super_shard_arrays(
+            dev, 0, self.layout.n_tiles, nnz_cap=self._nnz_max,
+            nblocks=self.nblocks)
+        return ind, val, rows
+
+    def super_shard_arrays(self, dev: int, t0: int, t1: int, *,
+                           nnz_cap: int, nblocks: int
+                           ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                      np.ndarray, np.ndarray]:
+        """Materialize the tile window ``[t0, t1)`` of one device's shard:
+        ``(indices, values, local_rows, block_to_tile, tile_visited)`` with
+        static shapes ``(nnz_cap, N) / (nnz_cap,) / (nnz_cap,) /
+        (nblocks,) / (n_tiles,)``.
+
+        Super-shards split at TILE boundaries, so every block — and hence
+        every output row — lives in exactly one window, with block order
+        within a tile and slot order within a block unchanged from the
+        resident shard. Accumulating the windows' masked EC partials into a
+        zero accumulator is therefore bitwise identical to the resident
+        single-call EC (see core.mttkrp.make_partial_mttkrp_fn). Row and
+        tile ids stay ABSOLUTE (device-local padded layout); only the slot
+        packing restarts at 0 per window. The full window
+        ``(0, n_tiles)`` reproduces :meth:`device_arrays` exactly.
+
+        Trailing capacity beyond the window's padded slots is pure padding
+        (value 0, rows pointing at the window's last used tile), identical
+        in kind to the resident shard's trailing pad blocks.
+        """
         lay = self.layout
         m, r, tile, block_p = (self.num_devices, self.r, self.tile,
                                self.block_p)
         if not 0 <= dev < m:
             raise IndexError(f"device {dev} out of range [0, {m})")
-        g, s = dev // r, dev % r
         n_tiles = lay.n_tiles
+        if not 0 <= t0 <= t1 <= n_tiles:
+            raise ValueError(f"tile window [{t0}, {t1}) outside "
+                             f"[0, {n_tiles}]")
+        g, s = dev // r, dev % r
         cum_g = self._cum[g]
         b0, b1 = int(self._bounds[g, s]), int(self._bounds[g, s + 1])
-        cnt, tc = _device_tile_counts(cum_g, b0, b1, n_tiles=n_tiles,
-                                      tile=tile)
+        cnt_full, tc_full = _device_tile_counts(cum_g, b0, b1,
+                                                n_tiles=n_tiles, tile=tile)
+        tc = tc_full[t0:t1]
         tc_pad = -(-tc // block_p) * block_p
+        w_tiles = t1 - t0
+        r_lo, r_hi = t0 * tile, t1 * tile
+        need = int(tc_pad.sum())
+        if need > nnz_cap:
+            raise ValueError(
+                f"window [{t0}, {t1}) of device {dev} needs {need} slots "
+                f"but nnz_cap={nnz_cap}")
+        kb = need // block_p
+        if kb > nblocks:
+            raise ValueError(
+                f"window [{t0}, {t1}) of device {dev} needs {kb} blocks "
+                f"but nblocks={nblocks}")
+
+        # blocking metadata: absolute tile ids, trailing pad blocks revisit
+        # the window's last used tile (no switches) — tile 0 when empty,
+        # matching the empty-device convention of the resident layout
+        true_b2t = np.repeat(np.arange(t0, t1), tc_pad // block_p)
+        b2t = np.zeros(nblocks, np.int64)
+        b2t[:kb] = true_b2t
+        b2t[kb:] = true_b2t[-1] if kb else 0
+        visited = np.zeros(n_tiles, np.float32)
+        visited[b2t] = 1.0
+
         # Dtype split: ranks/cursors (cum_g, seen, rank) stay int64 — they
         # count nonzeros and must survive billion-nnz tensors — while
-        # anything bounded by this device's nnz_max (slot positions, row
+        # anything bounded by this window's nnz_cap (slot positions, row
         # ids) is int32, halving the materializer's transient footprint.
-        cnt32 = cnt.astype(np.int32)
-        tile_off = np.zeros(n_tiles, np.int32)
+        cnt32 = cnt_full[r_lo:r_hi].astype(np.int32)
+        tile_off = np.zeros(w_tiles, np.int32)
         tile_off[1:] = np.cumsum(tc_pad[:-1], dtype=np.int64).astype(np.int32)
-        cumcnt = np.zeros(self.rows_max + 1, np.int32)
+        cumcnt = np.zeros(w_tiles * tile + 1, np.int32)
         np.cumsum(cnt32, out=cumcnt[1:])
-        # blocked slot where each padded row's run starts on this device
+        # blocked slot where each window row's run starts (indexed by
+        # row - r_lo)
         row_slot_start = (np.repeat(tile_off - cumcnt[:-1].reshape(
-            n_tiles, tile)[:, 0], tile) + cumcnt[:-1])
+            w_tiles, tile)[:, 0], tile) + cumcnt[:-1]) if w_tiles else \
+            np.zeros(0, np.int32)
 
-        nnz_max, nmodes = self._nnz_max, self.nmodes
+        nmodes = self.nmodes
         # final dtypes from the start: the padded translations fit int32 by
         # construction, and the int64 intermediates would double this
         # function's peak (the bound the out-of-core path exists to keep)
-        values = np.zeros(nnz_max, np.float32)
-        indices = np.zeros((nnz_max, nmodes), np.int32)
+        values = np.zeros(nnz_cap, np.float32)
+        indices = np.zeros((nnz_cap, nmodes), np.int32)
         # local_rows analytically: real slots get their row, in-tile pad
         # slots the tile's first row, trailing slots the last used tile's
-        local_rows = np.full(nnz_max,
-                             int(self.block_to_tile[dev, -1]) * tile,
+        local_rows = np.full(nnz_cap, int(b2t[-1]) * tile if nblocks else 0,
                              np.int32)
         pad_per_tile = (tc_pad - tc).astype(np.int32)
         pad_pos = (np.repeat(tile_off + tc.astype(np.int32), pad_per_tile)
                    + _ragged_arange(pad_per_tile))
         local_rows[pad_pos] = np.repeat(
-            np.arange(n_tiles, dtype=np.int32) * tile, pad_per_tile)
-        real_rows = np.repeat(np.arange(self.rows_max, dtype=np.int32),
-                              cnt32)
+            np.arange(t0, t1, dtype=np.int32) * tile, pad_per_tile)
+        real_rows = np.repeat(np.arange(r_lo, r_hi, dtype=np.int32), cnt32)
         real_pos = np.repeat(row_slot_start, cnt32) + _ragged_arange(cnt32)
         local_rows[real_pos] = real_rows
 
         # stream: group-level arrival cursor per padded row reproduces the
-        # stable lexsort rank, chunk skipping via the manifest index ranges
-        glo, ghi = self._group_span[g]
-        if glo >= 0:
-            seen = np.zeros(self.rows_max, np.int64)
+        # stable lexsort rank; chunk skipping via the manifest index ranges,
+        # restricted to the global ids the WINDOW's rows own. A chunk
+        # holding any window row's nonzeros necessarily overlaps that id
+        # range, and the per-row cursors only need arrivals of window rows
+        # — so skipping non-overlapping chunks cannot desync a rank. The
+        # same invariant lets each chunk be pre-filtered to its [glo, ghi]
+        # candidates with one range compare BEFORE any gather: every
+        # arrival at a window row carries a global id inside the window's
+        # owned range, and arrivals elsewhere feed cursors this window
+        # never reads. Unsorted stores can't skip whole chunks, so this
+        # per-entry cut is what keeps an S-window sweep from paying S full
+        # O(nnz log nnz) ranking passes.
+        base = g * self.rows_max
+        p2g = lay.padded_to_global[base + r_lo:base + r_hi]
+        owned = p2g[p2g >= 0]
+        if owned.size:
+            glo, ghi = int(owned.min()), int(owned.max())
+            w_rows = r_hi - r_lo
+            seen = np.zeros(w_rows, np.int64)
             owner, g2p = lay.owner, lay.global_to_padded
-            base = g * self.rows_max
-            for k in self.store.chunks_overlapping(self.mode, int(glo),
-                                                   int(ghi)):
+            for k in self.store.chunks_overlapping(self.mode, glo, ghi):
                 ind, val = self.store.read_chunk(k)
-                sel = np.flatnonzero(owner[ind[:, self.mode]] == g)
-                if not sel.size:
+                gidx = ind[:, self.mode]
+                cand = np.flatnonzero((gidx >= glo) & (gidx <= ghi))
+                if cand.size:
+                    cand = cand[owner[gidx[cand]] == g]
+                if not cand.size:
+                    del ind, val  # release chunk buffers before next read
                     continue
-                lp = g2p[ind[sel, self.mode]] - base
+                lp = g2p[gidx[cand]] - base - r_lo
+                inw = np.flatnonzero((lp >= 0) & (lp < w_rows))
+                if not inw.size:
+                    del ind, val
+                    continue
+                sel, lp = cand[inw], lp[inw]
                 occ = _stable_occurrences(lp)
-                rank = cum_g[lp] + seen[lp] + occ
-                seen += np.bincount(lp, minlength=self.rows_max)
+                rank = cum_g[lp + r_lo] + seen[lp] + occ
+                seen += np.bincount(lp, minlength=w_rows)
                 w = np.flatnonzero((rank >= b0) & (rank < b1))
                 if not w.size:
+                    del ind, val
                     continue
                 lpw = lp[w]
                 slot = (row_slot_start[lpw] + rank[w]
-                        - np.maximum(cum_g[lpw], b0))
+                        - np.maximum(cum_g[lpw + r_lo], b0))
                 rows_sel = sel[w]
                 vw = val[rows_sel]
                 values[slot] = vw
@@ -277,7 +362,10 @@ class StoreModePartition:
                 for col in range(nmodes):
                     indices[snz, col] = \
                         self.all_g2p[col][ind[rows_sel[nz], col]]
-        return indices, values, local_rows
+                # per-chunk release: a streamed sweep touches hundreds of
+                # chunk-groups; holding these to loop end would stack them
+                del ind, val
+        return indices, values, local_rows, b2t.astype(np.int32), visited
 
     def materialize(self) -> ModePartition:
         """Assemble the full in-memory :class:`ModePartition` (O(nnz) host
@@ -320,6 +408,141 @@ def _stable_occurrences(keys: np.ndarray) -> np.ndarray:
     occ = np.empty(keys.size, np.int64)
     occ[order] = np.arange(keys.size, dtype=np.int64) - run_starts[run_id]
     return occ
+
+
+# -- epoch streaming: budget-sized super-shards ------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModeStreamPlan:
+    """How one mode's sweep streams through device memory.
+
+    ``windows[dev][k]`` is the half-open tile window ``(t0, t1)`` of device
+    ``dev``'s k-th super-shard; devices with fewer super-shards than
+    ``num_shards`` are padded with empty ``(0, 0)`` windows (pure padding
+    shards — exact no-ops under the tile mask). All super-shards of a mode
+    share one static shape (``nnz_cap`` slots, ``nblocks`` blocks) so the
+    jitted partial-MTTKRP compiles once per mode.
+    """
+
+    mode: int
+    num_shards: int                # sweep steps (max super-shards over devs)
+    windows: tuple[tuple[tuple[int, int], ...], ...]   # [dev][k] -> (t0, t1)
+    nnz_cap: int                   # slots per super-shard (mult. of block_p)
+    nblocks: int                   # blocks per super-shard
+    n_tiles: int
+    shard_bytes: int               # device bytes of one super-shard
+    budget_bytes: int              # the per-device budget it was split for
+    buffers: int                   # concurrently resident super-shards
+
+    def resident_bound_bytes(self) -> int:
+        """Peak streamed bytes a device can hold under this plan."""
+        return self.buffers * self.shard_bytes
+
+
+def stream_shard_nbytes(nnz_cap: int, nblocks: int, n_tiles: int,
+                        nmodes: int) -> int:
+    """Device bytes of one super-shard's streamed arrays: int32 indices ×
+    nmodes + f32 values + int32 local_rows per slot, int32 block_to_tile
+    per block, f32 tile_visited per tile."""
+    return nnz_cap * (4 * nmodes + 8) + nblocks * 4 + n_tiles * 4
+
+
+def resident_shard_nbytes(part, nmodes: int) -> int:
+    """Per-device bytes of one mode's RESIDENT shard arrays — the baseline
+    a streaming budget is compared against (a tensor's "total shard bytes"
+    is this summed over modes). Works for in-memory and lazy partitions."""
+    n_tiles = int(part.tile_visited.shape[-1])
+    return stream_shard_nbytes(part.nnz_max, part.nblocks, n_tiles, nmodes)
+
+
+def budget_slot_cap(budget_bytes: int, *, nmodes: int, n_tiles: int,
+                    block_p: int, buffers: int = 2) -> int:
+    """Kernel slots one super-shard may hold under a per-device memory
+    budget shared by ``buffers`` concurrently-resident shards, floored to a
+    whole number of ``block_p`` blocks (0 if the fixed tile mask alone
+    overflows). Inverse of :func:`stream_shard_nbytes`; also the member-nnz
+    cap streaming-aware rebalancing clamps migrations to."""
+    per_shard = budget_bytes // buffers
+    # bytes a slot costs including its share of block_to_tile, after the
+    # fixed tile_visited vector
+    fixed = n_tiles * 4
+    per_slot = 4 * nmodes + 8 + 4 / block_p
+    cap = int((per_shard - fixed) // per_slot) if per_shard > fixed else 0
+    return (cap // block_p) * block_p
+
+
+def split_mode_super_shards(part: StoreModePartition, budget_bytes: int, *,
+                            buffers: int = 2) -> ModeStreamPlan:
+    """Split every device's shard into super-shards fitting a per-device
+    memory budget — from the manifest-derived tile histograms alone, zero
+    chunk reads.
+
+    With ``buffers`` super-shards concurrently resident (2 = double
+    buffering: shard k+1 transfers while k computes), each super-shard gets
+    ``budget_bytes // buffers``. Windows split at tile boundaries only —
+    the invariant that makes streamed accumulation bitwise identical to the
+    resident path — so the densest single tile bounds the smallest feasible
+    budget, and a budget below one store chunk's staging bytes is rejected
+    outright (materializing any super-shard stages at least one chunk in
+    host RAM).
+    """
+    if buffers < 1:
+        raise ValueError("buffers must be >= 1")
+    if budget_bytes < 1:
+        raise ValueError("budget_bytes must be positive")
+    lay = part.layout
+    n_tiles, block_p, nmodes = lay.n_tiles, part.block_p, part.nmodes
+    m = part.num_devices
+    chunk_bytes = part.store.chunk_nnz * (8 * nmodes + 4)
+    if budget_bytes < chunk_bytes:
+        raise ValueError(
+            f"memory budget {budget_bytes} B is smaller than one store "
+            f"chunk's staging footprint ({part.store.chunk_nnz} nnz × "
+            f"{8 * nmodes + 4} B = {chunk_bytes} B): materializing any "
+            f"super-shard reads at least one chunk. Raise the budget or "
+            f"re-ingest the store with a smaller chunk_nnz")
+    slot_cap = budget_slot_cap(budget_bytes, nmodes=nmodes, n_tiles=n_tiles,
+                               block_p=block_p, buffers=buffers)
+    fixed = n_tiles * 4
+    per_slot = 4 * nmodes + 8 + 4 / block_p
+    dense_tile = int(part._dev_tc_pad.max()) if part._dev_tc_pad.size else 0
+    min_slots = max(dense_tile, block_p)
+    if slot_cap < min_slots:
+        min_budget = buffers * int(min_slots * per_slot + fixed + 1)
+        raise ValueError(
+            f"memory budget {budget_bytes} B cannot hold mode "
+            f"{part.mode}'s densest row tile ({dense_tile} padded slots; "
+            f"super-shards split at tile boundaries): need at least "
+            f"~{min_budget} B for {buffers}-buffered streaming, or re-plan "
+            f"with a smaller tile")
+    windows: list[list[tuple[int, int]]] = []
+    for dev in range(m):
+        tc_pad = part._dev_tc_pad[dev]
+        wins: list[tuple[int, int]] = []
+        t0, acc = 0, 0
+        for t in range(n_tiles):
+            c = int(tc_pad[t])
+            if acc + c > slot_cap and acc > 0:
+                wins.append((t0, t))
+                t0, acc = t, 0
+            acc += c
+        wins.append((t0, n_tiles))
+        windows.append(wins)
+    num_shards = max(len(w) for w in windows)
+    for wins in windows:
+        wins.extend([(0, 0)] * (num_shards - len(wins)))
+    nnz_cap = max(
+        (int(part._dev_tc_pad[dev, t0:t1].sum())
+         for dev in range(m) for t0, t1 in windows[dev]),
+        default=0)
+    nnz_cap = max(nnz_cap, block_p)
+    nblocks = nnz_cap // block_p
+    return ModeStreamPlan(
+        mode=part.mode, num_shards=num_shards,
+        windows=tuple(tuple(w) for w in windows),
+        nnz_cap=nnz_cap, nblocks=nblocks, n_tiles=n_tiles,
+        shard_bytes=stream_shard_nbytes(nnz_cap, nblocks, n_tiles, nmodes),
+        budget_bytes=budget_bytes, buffers=buffers)
 
 
 def lazy_parts_from_layouts(store: TensorStore, layouts: list[ModeLayout]

@@ -101,7 +101,10 @@ class TensorStore:
         ind = np.empty((hi - lo, self.nmodes), np.int64)
         for d in range(self.nmodes):
             ind[:, d] = self._cols[d][lo:hi]
-        val = np.asarray(self._vals[lo:hi], np.float32)
+        # np.array (not asarray): same-dtype asarray returns a view that
+        # pins the np.memmap open — callers would accumulate one mapped
+        # handle per chunk across a streamed sweep
+        val = np.array(self._vals[lo:hi], np.float32)
         self.access_stats["chunk_reads"] += 1
         self.access_stats["nnz_read"] += hi - lo
         return ind, val

@@ -185,6 +185,80 @@ def test_solver_close_and_context_manager(small_tensor_4mode):
     solver.close()                # idempotent after exit
 
 
+def test_pending_prefetch_counts_against_bound(plan4, mesh):
+    """Regression: an in-flight prefetch holds device memory just like a
+    resident shard — the prefetch+1 bound must count resident + pending at
+    every instant, including the moment a new key is added (room is made
+    BEFORE the add, never by evicting after)."""
+    peaks = []
+    s = _streamer(plan4, mesh, prefetch=1)
+    orig_add = s._track_add
+
+    def checking_add(key, _orig=orig_add):
+        # called just before the key enters _resident/_pending: the bound
+        # must already have room for it
+        peaks.append(len(s._resident) + len(s._pending) + 1)
+        _orig(key)
+
+    s._track_add = checking_add
+    for step in range(12):
+        s.get(step % plan4.nmodes)
+        assert len(s._resident) + len(s._pending) <= 2
+    assert peaks and max(peaks) <= 2
+    s.close()
+
+
+def test_superseded_prefetch_settled_on_divergence(plan4, mesh):
+    """When the access pattern diverges from the prefetch chain, the stale
+    pending shard must be settled and discarded — it must not survive as a
+    third resident alongside the new current+next pair."""
+    import threading
+
+    release = threading.Event()
+    s = _streamer(plan4, mesh, prefetch=1)
+    orig = s._build
+
+    def gated(mode, _orig=orig):
+        if mode == 1:
+            assert release.wait(timeout=10)
+        return _orig(mode)
+
+    s._build = gated
+    s.get(0)                       # pending {1}, blocked in the worker
+    t = threading.Timer(0.2, release.set)
+    t.start()
+    s.get(2)                       # diverges: the mode-1 prefetch is stale
+    t.join()
+    assert set(s._resident) | set(s._pending) <= {2, 3}
+    assert len(s._resident) + len(s._pending) <= 2
+    s.close()
+
+
+def test_settle_cancels_queued_prefetch(plan4, mesh):
+    """A superseded prefetch still queued behind the worker must be
+    cancelled outright — its build never runs."""
+    import threading
+
+    release = threading.Event()
+    loads = []
+    s = _streamer(plan4, mesh, prefetch=2, loads=loads)
+    orig = s._build
+
+    def gated(mode, _orig=orig):
+        if mode == 1:
+            assert release.wait(timeout=10)
+        return _orig(mode)
+
+    s._build = gated
+    s.get(0)           # resident {0}, pending {1} blocked in the worker
+    s._dispatch(2)     # queued behind mode 1 -> still cancellable
+    s._settle(2)
+    release.set()
+    s._wait(1)
+    s.close()
+    assert 2 not in loads
+
+
 def test_update_plan_cancels_stale_pending(plan4, mesh, small_tensor_4mode):
     """update_plan must settle a stale mode's pending prefetch BEFORE the
     plan pointer moves — the replacement shards must come from the new
