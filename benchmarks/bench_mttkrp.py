@@ -46,6 +46,15 @@ by the double-buffered prefetch), exposed transfer ms/sweep, peak streamed
 device bytes vs the budget, and each path's peak-RSS delta (the streamed
 run must stay below the resident one — the point of the mode).
 
+A sixth scenario exercises the *serving path* (repro.serve): an exactly
+low-rank store-backed tensor is fitted, checkpointed, and booted as a
+``CPService``; the report carries the batched jitted query throughput vs a
+per-request ``reconstruct_at`` loop at equal results (the >= 50x speedup
+flag), client-side p50/p99 latency before and during a concurrent
+background incremental refit (the bounded-p99 flag), and the
+appended-chunk incremental-refresh fit vs a from-scratch refit of the
+grown store (the < 1e-3 agreement flag).
+
 Output: ``experiments/bench/BENCH_mttkrp.json`` (benchmarks/common.py's
 standard location) plus a copy at the repo root (``BENCH_mttkrp.json``) so
 the perf trajectory is tracked across PRs. On this CPU-only container the
@@ -392,6 +401,134 @@ def bench_stream_overlap(*, nnz: int = 1_200_000, sweeps: int = 3,
     return result
 
 
+SERVE_SCRIPT = r"""
+import json, os, time
+import numpy as np
+import repro.api as api
+from repro.api.config import DecomposeConfig, RuntimeConfig
+from repro.core.coo import SparseTensor
+from repro.serve import CPService, store_fit
+from repro.sparse.io import make_lowrank_tensor
+from repro.store import TensorStore, append_to_store, write_store_from_coo
+
+WORK = {work!r}
+SHAPE = (48, 40, 32)
+RANK = 4
+ROWS = {rows}
+QUERIES = {queries}
+BATCH = 16
+
+# exactly rank-R tensor: base store is the first 85%, the remaining 15%
+# is appended later, so warm and scratch refits of the grown store both
+# converge to fit ~ 1 and their agreement is a real invariant
+t = make_lowrank_tensor(SHAPE, RANK, {nnz}, seed=5)
+base_n = int(t.nnz * 0.85)
+store_path = os.path.join(WORK, "bench_serve.store")
+write_store_from_coo(SparseTensor(t.indices[:base_n], t.values[:base_n],
+                                  SHAPE), store_path, chunk_nnz=1024)
+ckpt = os.path.join(WORK, "bench_serve_ckpt")
+
+def _cfg(ckpt_dir=None):
+    return DecomposeConfig(rank=RANK, runtime=RuntimeConfig(
+        num_devices=1, tol=0.0, seed=0, checkpoint_dir=ckpt_dir))
+
+cfg = _cfg(ckpt)
+with api.compile(api.plan(TensorStore(store_path), cfg), cfg) as solver:
+    fitted = solver.run(10)
+    solver.checkpoint()
+
+out = {{"shape": list(SHAPE), "rank": RANK, "nnz": int(t.nnz),
+        "base_nnz": base_n, "rows": ROWS, "queries": QUERIES,
+        "batch": BATCH}}
+rng = np.random.default_rng(11)
+store = TensorStore(store_path)
+
+with CPService.boot(ckpt, store=store, config=_cfg()) as svc:
+    # --- throughput: batched jitted engine vs per-request loop ----------
+    coords = np.stack([rng.integers(0, s, size=ROWS) for s in SHAPE], 1)
+    fitted.reconstruct_at(coords[:1])                  # warm the loop path
+    t0 = time.perf_counter()
+    loop_vals = np.concatenate([fitted.reconstruct_at(coords[i:i + 1])
+                                for i in range(ROWS)])
+    loop_s = time.perf_counter() - t0
+    svc.engine.reconstruct_batch(coords)               # compile the bucket
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        batched = svc.engine.reconstruct_batch(coords)
+        best = min(best, time.perf_counter() - t0)
+    out["per_request_loop_s"] = loop_s
+    out["batched_s"] = best
+    out["batched_qps_rows"] = ROWS / best
+    out["batched_speedup"] = loop_s / best
+    out["parity_max_abs_err"] = float(
+        np.max(np.abs(batched.astype(np.float64) - loop_vals)))
+
+    def probe(n):
+        lat = []
+        for _ in range(n):
+            c = np.stack([rng.integers(0, s, size=BATCH) for s in SHAPE], 1)
+            t0 = time.perf_counter()
+            svc.reconstruct(c)
+            lat.append(time.perf_counter() - t0)
+        return np.asarray(lat)
+
+    # --- latency floor, then the same probe during a background refit ---
+    base_lat = probe(QUERIES)
+    append_to_store(store_path, t.indices[base_n:].astype(np.int64),
+                    t.values[base_n:])
+    svc.refresh(sweeps=6, wait=False)
+    refit_lat = probe(QUERIES)
+    event = svc.wait_refresh()
+    out["p50_base_ms"] = float(np.percentile(base_lat, 50) * 1e3)
+    out["p99_base_ms"] = float(np.percentile(base_lat, 99) * 1e3)
+    out["p50_refit_ms"] = float(np.percentile(refit_lat, 50) * 1e3)
+    out["p99_refit_ms"] = float(np.percentile(refit_lat, 99) * 1e3)
+    out["refresh_published"] = bool(event.get("published"))
+    out["snapshot_version"] = int(svc.engine.version)
+    out["warm_fit"] = float(svc.engine.snapshot.fit)
+    out["metrics"] = svc.metrics_report()
+
+# --- from-scratch refit of the grown store, same fit functional ---------
+store.refresh()
+cfg = _cfg()
+with api.compile(api.plan(store, cfg), cfg) as solver:
+    scratch = solver.run(12)
+out["scratch_fit"] = store_fit(scratch.factors, scratch.lam, store)
+out["refresh_fit_delta"] = abs(out["warm_fit"] - out["scratch_fit"])
+print("RESULT_JSON:" + json.dumps(out))
+"""
+
+
+def bench_serve_load(*, nnz: int = 6000, rows: int = 8192,
+                     queries: int = 200, workdir: str = "/tmp") -> dict:
+    """Serving-path load test in its own subprocess (single device, like
+    production query serving). Flags are recorded, not asserted — a noisy
+    run must not lose the artifact; check_trajectory refuses True -> False
+    flips and tests/test_serve.py holds the deterministic invariants:
+
+    * ``speedup_50x`` — one jitted shape-bucketed ``reconstruct_batch``
+      call vs ``rows`` individual ``reconstruct_at`` calls, equal results
+      (``parity_ok``, fp32 tolerance);
+    * ``p99_bounded`` — client-side p99 while a background incremental
+      refit (plan + compile + 6 ALS sweeps) shares the process stays under
+      max(50x the idle p50, 500 ms);
+    * ``refresh_fit_ok`` — warm-start refresh of the appended store lands
+      within 1e-3 of a from-scratch refit, both scored by ``store_fit``.
+    """
+    result = run_subprocess_bench(
+        SERVE_SCRIPT.format(work=workdir, nnz=nnz, rows=rows,
+                            queries=queries), devices=1)
+    result["parity_ok"] = result["parity_max_abs_err"] < 1e-4
+    result["speedup_50x"] = result["batched_speedup"] >= 50.0
+    result["p99_bounded"] = (result["p99_refit_ms"]
+                             <= max(50.0 * result["p50_base_ms"], 500.0))
+    result["refresh_fit_ok"] = (result["refresh_published"]
+                                and result["snapshot_version"] == 2
+                                and result["refresh_fit_delta"] < 1e-3)
+    return result
+
+
 def bench_skew_rebalance(*, nnz: int = 40000, sweeps: int = 6) -> dict:
     """Rebalancer A/B on a hot-index tensor, 4 forced host devices (its own
     subprocess — the main process must keep a single device)."""
@@ -506,6 +643,8 @@ def main() -> None:
                     help="skip the out-of-core ingest scenario")
     ap.add_argument("--skip-stream", action="store_true",
                     help="skip the epoch-streaming overlap scenario")
+    ap.add_argument("--skip-serve", action="store_true",
+                    help="skip the serving-path load-test scenario")
     args = ap.parse_args()
 
     if args.quick:
@@ -586,6 +725,23 @@ def main() -> None:
               f"streamed {stream['streaming_rss_delta_kb'] / 1024:.0f} MB "
               f"vs resident {stream['resident_rss_delta_kb'] / 1024:.0f} MB")
 
+    serve = None
+    if not args.skip_serve:
+        serve = bench_serve_load(
+            nnz=3000 if args.quick else 6000,
+            rows=2048 if args.quick else 8192,
+            queries=80 if args.quick else 200)
+        print(f"serve load (rows={serve['rows']}): batched "
+              f"{serve['batched_s'] * 1e3:.2f}ms "
+              f"({serve['batched_qps_rows']:.0f} rows/s) vs per-request "
+              f"loop {serve['per_request_loop_s'] * 1e3:.0f}ms (speedup "
+              f"{serve['batched_speedup']:.0f}x, parity err "
+              f"{serve['parity_max_abs_err']:.1e}); p50/p99 "
+              f"{serve['p50_base_ms']:.2f}/{serve['p99_base_ms']:.2f}ms "
+              f"idle, p99 {serve['p99_refit_ms']:.2f}ms during refit; "
+              f"refresh fit delta {serve['refresh_fit_delta']:.2e} "
+              f"(snapshot v{serve['snapshot_version']})")
+
     save_result("BENCH_mttkrp", {
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
@@ -598,6 +754,7 @@ def main() -> None:
         "exchange_overlap": xchg,
         "ingest": ingest,
         "stream_overlap": stream,
+        "serve_load": serve,
     }, also_root=True)
 
 

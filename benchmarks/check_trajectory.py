@@ -10,7 +10,9 @@ claim on a CPU-only CI container (wall times there are noise):
 * exchange: the modelled sweep volume must not grow beyond tolerance and
   ``bf16_volume_ratio`` must stay ~half the fp32 wire volume;
 * epoch streaming: ``fits_equal`` / ``peak_within_budget`` must not flip
-  False, and ``bytes_streamed`` must not grow beyond tolerance.
+  False, and ``bytes_streamed`` must not grow beyond tolerance;
+* serving: the ``parity_ok`` / ``speedup_50x`` / ``p99_bounded`` /
+  ``refresh_fit_ok`` load-test flags must never flip True -> False.
 
 Sections (or grid points) are compared ONLY when present and non-None in
 BOTH artifacts with matching identifying parameters — a PR that adds,
@@ -81,6 +83,18 @@ def compare(old: dict, new: dict, tol: float) -> tuple[int, list[str]]:
         if _grew(ob, nb, tol):
             failures.append(f"stream_overlap bytes_streamed {ob} -> {nb} "
                             f"(> {tol:.0%})")
+
+    ov, nv = old.get("serve_load"), new.get("serve_load")
+    if ov and nv and \
+            (ov.get("rows"), ov.get("queries"), ov.get("rank"),
+             ov.get("nnz")) == \
+            (nv.get("rows"), nv.get("queries"), nv.get("rank"),
+             nv.get("nnz")):
+        checked += 1
+        for flag in ("parity_ok", "speedup_50x", "p99_bounded",
+                     "refresh_fit_ok"):
+            if ov.get(flag) and not nv.get(flag):
+                failures.append(f"serve_load.{flag} flipped True -> False")
 
     return checked, failures
 

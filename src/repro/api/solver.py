@@ -42,7 +42,41 @@ from repro.core.decompose import CPResult
 from repro.core.partition import CPPlan
 from repro.sparse.stream import ShardStreamer, SuperShardStreamer
 
-__all__ = ["CPSolver", "compile"]
+__all__ = ["CPSolver", "compile", "validate_factor_payload"]
+
+
+def validate_factor_payload(factors, lam, *, shape, rank,
+                            source: str) -> None:
+    """Validate GLOBAL-layout factors + lam against an expected geometry.
+
+    Shared by :meth:`CPSolver.restore`/:meth:`CPSolver.load_state` and the
+    serving boot path — without it a rank-mismatched checkpoint dies in a
+    cryptic broadcast error deep inside the ownership re-pad. Raises
+    ``ValueError`` naming the offending mode and BOTH ranks/sizes."""
+    nmodes = len(shape)
+    if len(factors) != nmodes:
+        raise ValueError(
+            f"{source} has {len(factors)} factor matrices, but the target "
+            f"tensor has {nmodes} modes (shape {tuple(shape)})")
+    for w, fg in enumerate(factors):
+        fs = tuple(int(s) for s in np.shape(fg))
+        if len(fs) != 2:
+            raise ValueError(f"{source} factor for mode {w} is not a "
+                             f"matrix (shape {fs})")
+        if fs[1] != rank:
+            raise ValueError(
+                f"{source} was written at rank {fs[1]}, but this "
+                f"solver/plan is compiled for rank {rank} (mode {w} "
+                f"factor is {fs}); re-fit or re-compile at a matching rank")
+        if fs[0] != shape[w]:
+            raise ValueError(
+                f"{source} factor for mode {w} has {fs[0]} rows, but the "
+                f"target tensor's mode {w} has {shape[w]} — the "
+                f"checkpoint belongs to a different tensor")
+    ls = tuple(int(s) for s in np.shape(lam))
+    if ls != (rank,):
+        raise ValueError(f"{source} lambda has shape {ls}, expected "
+                         f"({rank},)")
 
 
 class CPSolver:
@@ -186,17 +220,31 @@ class CPSolver:
         if restored is None:
             return False
         payload, step = restored
+        self.load_state(payload["factors"], payload["lam"],
+                        fits=list(payload.get("fits", [])), sweep=step,
+                        source=f"checkpoint step {step} in "
+                               f"{self._ckpt_mgr.dir!r}")
+        return True
+
+    def load_state(self, factors, lam, *, fits=(), sweep: int = 0,
+                   source: str = "warm-start state") -> None:
+        """Install GLOBAL-layout ``(I_w, rank)`` factors as the solver's
+        current state (the warm-start entry: checkpoint restore, serving
+        refresh, transfer from another solver). Validates geometry first —
+        a mismatched rank or mode size raises a ``ValueError`` naming both
+        sides instead of a broadcast error inside the ownership re-pad."""
         rank = self.config.rank
-        factors = []
-        for w, fg in enumerate(payload["factors"]):
+        validate_factor_payload(factors, lam, shape=self.plan.shape,
+                                rank=rank, source=source)
+        padded = []
+        for w, fg in enumerate(factors):
             fp = np.zeros((self.plan.modes[w].padded_rows, rank), np.float32)
             fp[self.plan.global_to_padded[w]] = fg
-            factors.append(jnp.asarray(fp))
-        grams = [f.T @ f for f in factors]
+            padded.append(jnp.asarray(fp))
+        grams = [f.T @ f for f in padded]
         self.state = als_mod.ALSState(
-            factors=factors, lam=jnp.asarray(payload["lam"]), grams=grams,
-            sweep=step, fits=list(payload.get("fits", [])))
-        return True
+            factors=padded, lam=jnp.asarray(np.asarray(lam, np.float32)),
+            grams=grams, sweep=sweep, fits=list(fits))
 
     def checkpoint(self) -> None:
         """Write the current state (GLOBAL-layout factors) at its sweep."""
@@ -428,6 +476,15 @@ class CPSolver:
             plan=self.plan,
             sweeps=s.sweep,
         )
+
+    def export_snapshot(self, *, version: int = 1, source: str = "solver"):
+        """Export the current state as an immutable serving
+        :class:`~repro.serve.engine.FactorSnapshot` — the hand-off from a
+        training/refit session to a :class:`~repro.serve.ServingEngine`
+        (forces a sync like :meth:`result`)."""
+        from repro.serve.engine import FactorSnapshot
+        return FactorSnapshot.from_result(self.result(), version=version,
+                                          source=source)
 
 
 def compile(plan: CPPlan, config: DecomposeConfig, *,

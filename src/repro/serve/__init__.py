@@ -1,0 +1,50 @@
+"""repro.serve — decomposition-as-a-service.
+
+The solver side of the repo turns a tensor into factors; this package
+turns factors into a long-running query service, the regime the ROADMAP's
+production north star describes:
+
+* :mod:`repro.serve.engine` — :class:`FactorSnapshot` (immutable published
+  model version) and :class:`ServingEngine` (jitted, shape-bucketed
+  ``reconstruct_batch`` / ``topk_slice`` query kernels; blue/green
+  snapshot swaps without retracing).
+* :mod:`repro.serve.batcher` — :class:`MicroBatcher` request coalescing
+  with admission control (bounded depth, deadlines,
+  :class:`RejectedError` on overload).
+* :mod:`repro.serve.refresh` — grown-store detection
+  (:meth:`TensorStore.refresh`) and :func:`incremental_refit`
+  (warm-start ALS with untouched rows frozen), plus the fit evaluators
+  deploys gate on.
+* :mod:`repro.serve.metrics` — :class:`ServiceMetrics` counters /
+  latency histograms / gauges behind one JSON ``metrics_report()``.
+* :mod:`repro.serve.service` — :class:`CPService`: boot from a
+  checkpoint directory, serve during background refits, rolling deploys
+  with rollback on fit regression.
+
+Quickstart (after a fit with ``runtime.checkpoint_dir`` set)::
+
+    from repro.serve import CPService
+    from repro.store import TensorStore
+
+    svc = CPService.boot("ckpts/", store=TensorStore("data.store"),
+                         config=cfg)
+    values = svc.reconstruct(coords)           # (k, nmodes) -> (k,)
+    scores, items = svc.topk([user, 0, t], mode=1, k=10)
+    # ... append_to_store(...) grows data.store ...
+    svc.refresh(wait=False)                    # queries keep flowing
+    print(svc.metrics_report())
+
+``python -m repro.serve --once`` drives the same lifecycle from the CLI.
+"""
+from repro.serve.batcher import MicroBatcher, RejectedError
+from repro.serve.engine import FactorSnapshot, ServingEngine
+from repro.serve.metrics import LatencyHistogram, ServiceMetrics
+from repro.serve.refresh import (affected_row_masks, incremental_refit,
+                                 sample_fit, store_fit)
+from repro.serve.service import CPService
+
+__all__ = [
+    "CPService", "FactorSnapshot", "ServingEngine", "MicroBatcher",
+    "RejectedError", "ServiceMetrics", "LatencyHistogram",
+    "incremental_refit", "affected_row_masks", "store_fit", "sample_fit",
+]

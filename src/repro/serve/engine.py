@@ -1,0 +1,227 @@
+"""Snapshot-serving query engine.
+
+A :class:`FactorSnapshot` is an immutable published CP model — GLOBAL-layout
+``(I_w, R)`` device factors plus the weight vector ``lam`` — tagged with a
+monotonically increasing version. A :class:`ServingEngine` holds exactly one
+published snapshot and answers two query shapes against it:
+
+* :meth:`ServingEngine.reconstruct_batch` — model values at a batch of
+  coordinates, ``x̂[i] = Σ_r λ_r · Π_w F_w[idx[i, w], r]`` (the jitted fp32
+  batch counterpart of :meth:`CPResult.reconstruct_at`);
+* :meth:`ServingEngine.topk_slice` — top-k rows of one *free* mode by
+  reconstruction score with every other mode's coordinate fixed (e.g. the
+  top-k items for a given user × time slice): the fixed coordinates
+  contract to a weight vector ``w_r = λ_r · Π_{u≠mode} F_u[c_u, r]`` and
+  the scores are one ``(I_mode, R) @ (R,)`` product — never a dense
+  reconstruction.
+
+Retrace discipline: request sizes are padded up to power-of-two buckets, so
+the jitted kernels see at most ``log2(max batch)`` distinct shapes per
+operation no matter how sizes vary per request — and the factors are traced
+as *arguments*, so publishing a new same-geometry snapshot reuses every
+compiled kernel. Snapshot publication is a single attribute swap
+(blue/green): in-flight queries keep the snapshot object they started with,
+new queries see the new one, readers never block on a refit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decompose import CPResult, validate_coords
+from repro.serve.metrics import ServiceMetrics
+
+__all__ = ["FactorSnapshot", "ServingEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorSnapshot:
+    """One immutable published model version (device-resident, fp32)."""
+
+    factors: tuple[jax.Array, ...]   # GLOBAL layout (I_w, R) each
+    lam: jax.Array                   # (R,)
+    shape: tuple[int, ...]
+    rank: int
+    version: int
+    fit: float | None = None         # fit the publisher measured, if any
+    created_unix: float = 0.0
+    source: str = "unknown"
+
+    @classmethod
+    def from_arrays(cls, factors: Sequence[np.ndarray], lam: np.ndarray, *,
+                    version: int, fit: float | None = None,
+                    source: str = "arrays") -> "FactorSnapshot":
+        facs = tuple(jnp.asarray(np.asarray(f, np.float32)) for f in factors)
+        lam = jnp.asarray(np.asarray(lam, np.float32))
+        if lam.ndim != 1 or any(f.ndim != 2 or f.shape[1] != lam.shape[0]
+                                for f in facs):
+            raise ValueError(
+                f"inconsistent snapshot geometry: lam {lam.shape}, factor "
+                f"shapes {[tuple(f.shape) for f in facs]}")
+        return cls(factors=facs, lam=lam,
+                   shape=tuple(int(f.shape[0]) for f in facs),
+                   rank=int(lam.shape[0]), version=version, fit=fit,
+                   created_unix=time.time(), source=source)
+
+    @classmethod
+    def from_result(cls, result: CPResult, *, version: int = 1,
+                    source: str = "result") -> "FactorSnapshot":
+        return cls.from_arrays(
+            result.factors, result.lam, version=version,
+            fit=result.fits[-1] if result.fits else None, source=source)
+
+    def host_factors(self) -> list[np.ndarray]:
+        return [np.asarray(f) for f in self.factors]
+
+    @property
+    def age_s(self) -> float:
+        return time.time() - self.created_unix
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Smallest power of two >= max(n, lo)."""
+    return 1 << max(n - 1, lo - 1).bit_length()
+
+
+class ServingEngine:
+    """Jitted, shape-bucketed query execution over one published
+    :class:`FactorSnapshot`."""
+
+    def __init__(self, snapshot: FactorSnapshot, *,
+                 metrics: ServiceMetrics | None = None,
+                 max_batch: int = 1 << 15, min_bucket: int = 8):
+        self.metrics = metrics or ServiceMetrics()
+        self.max_batch = int(max_batch)
+        self.min_bucket = int(min_bucket)
+        self._publish_lock = threading.Lock()
+        self._reconstruct_shapes: set[int] = set()
+        self._topk_shapes: set[tuple] = set()
+        nmodes = len(snapshot.shape)
+
+        # factors/lam are traced ARGUMENTS: a published snapshot swap with
+        # equal geometry hits the same executable, zero retrace
+        def _reconstruct(factors, lam, idx):
+            acc = jnp.broadcast_to(lam[None, :],
+                                   (idx.shape[0], lam.shape[0]))
+            for w in range(nmodes):
+                acc = acc * factors[w][idx[:, w]]
+            return acc.sum(axis=1)
+
+        def _topk(factors, lam, coords, *, mode, k):
+            wgt = jnp.broadcast_to(lam[None, :],
+                                   (coords.shape[0], lam.shape[0]))
+            for u in range(nmodes):
+                if u != mode:
+                    wgt = wgt * factors[u][coords[:, u]]
+            scores = wgt @ factors[mode].T      # (B, I_mode)
+            return jax.lax.top_k(scores, k)
+
+        self._reconstruct_jit = jax.jit(_reconstruct)
+        self._topk_jit = jax.jit(_topk, static_argnames=("mode", "k"))
+        self.snapshot = snapshot  # last: engine fully formed at publish
+        self.metrics.set_gauge("snapshot_version", snapshot.version)
+
+    # -- snapshot lifecycle ------------------------------------------------
+    @property
+    def version(self) -> int:
+        return self.snapshot.version
+
+    def publish(self, snapshot: FactorSnapshot) -> None:
+        """Blue/green swap: validate geometry, then make ``snapshot`` the
+        one new queries see. The swap is a single attribute assignment —
+        in-flight queries finish on the snapshot they captured, readers
+        never observe a half-published state or block."""
+        with self._publish_lock:
+            cur = self.snapshot
+            if snapshot.shape != cur.shape or snapshot.rank != cur.rank:
+                raise ValueError(
+                    f"published snapshot geometry (shape {snapshot.shape}, "
+                    f"rank {snapshot.rank}) does not match the serving "
+                    f"geometry (shape {cur.shape}, rank {cur.rank}); a "
+                    f"geometry change is a new engine, not a publish")
+            if snapshot.version <= cur.version:
+                raise ValueError(
+                    f"published snapshot version {snapshot.version} must "
+                    f"exceed the current version {cur.version}")
+            self.snapshot = snapshot
+        self.metrics.set_gauge("snapshot_version", snapshot.version)
+
+    # -- queries -----------------------------------------------------------
+    def reconstruct_batch(self, indices: np.ndarray) -> np.ndarray:
+        """Model values at ``(k, nmodes)`` coordinates against the current
+        snapshot — fp32 device math, numerically consistent with the
+        float64 :meth:`CPResult.reconstruct_at` within fp32 tolerance.
+        Bounds-checked per mode; any batch size (padded to a power-of-two
+        bucket and, beyond ``max_batch``, chunked)."""
+        snap = self.snapshot  # capture once: swap-immune for this query
+        idx = validate_coords(indices, snap.shape)
+        n = idx.shape[0]
+        if n == 0:
+            return np.empty(0, np.float32)
+        if n > self.max_batch:
+            return np.concatenate(
+                [self.reconstruct_batch(idx[s:s + self.max_batch])
+                 for s in range(0, n, self.max_batch)])
+        with self.metrics.time("reconstruct"):
+            b = _bucket(n, self.min_bucket)
+            if b != n:  # pad with row 0 of every mode (always in range)
+                idx = np.concatenate(
+                    [idx, np.zeros((b - n, idx.shape[1]), np.int64)])
+            self._reconstruct_shapes.add(b)
+            self.metrics.set_gauge("reconstruct_buckets",
+                                   len(self._reconstruct_shapes))
+            out = self._reconstruct_jit(snap.factors, snap.lam,
+                                        jnp.asarray(idx))
+            res = np.asarray(out)[:n]
+        self.metrics.inc("queries_total")
+        self.metrics.inc("reconstruct_rows", n)
+        return res
+
+    def topk_slice(self, fixed_coords: np.ndarray, mode: int, k: int
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Top-``k`` indices of ``mode`` by reconstruction score with all
+        other coordinates fixed. ``fixed_coords`` is ``(nmodes,)`` or a
+        batch ``(B, nmodes)``; its ``mode`` column is ignored (pass
+        anything, conventionally 0). Returns ``(scores, indices)``, each
+        ``(k,)`` or ``(B, k)``, scores descending."""
+        snap = self.snapshot
+        nmodes = len(snap.shape)
+        if not 0 <= mode < nmodes:
+            raise ValueError(f"mode {mode} out of range [0, {nmodes})")
+        size = snap.shape[mode]
+        if not 1 <= k <= size:
+            raise ValueError(f"k={k} outside [1, {size}] for mode {mode} "
+                             f"(size {size})")
+        coords = np.asarray(fixed_coords)
+        single = coords.ndim == 1
+        if single:
+            coords = coords[None, :]
+        coords = np.array(coords, np.int64)
+        coords[:, mode] = 0  # free mode: neutralize before bounds check
+        coords = validate_coords(coords, snap.shape, what="fixed coordinate")
+        with self.metrics.time("topk"):
+            b = _bucket(coords.shape[0], self.min_bucket)
+            if b != coords.shape[0]:
+                pad = np.zeros((b - coords.shape[0], nmodes), np.int64)
+                padded = np.concatenate([coords, pad])
+            else:
+                padded = coords
+            kb = min(_bucket(k, 1), size)  # k bucketed too: few (mode, k)
+            self._topk_shapes.add((b, int(mode), kb))
+            self.metrics.set_gauge("topk_buckets", len(self._topk_shapes))
+            scores, idx = self._topk_jit(snap.factors, snap.lam,
+                                         jnp.asarray(padded),
+                                         mode=int(mode), k=kb)
+            scores = np.asarray(scores)[:coords.shape[0], :k]
+            idx = np.asarray(idx)[:coords.shape[0], :k]
+        self.metrics.inc("queries_total")
+        self.metrics.inc("topk_rows", coords.shape[0])
+        if single:
+            return scores[0], idx[0]
+        return scores, idx

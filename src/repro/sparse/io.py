@@ -23,7 +23,7 @@ from repro.core.coo import (SparseTensor, draw_sparse_block,  # noqa: F401
                             random_sparse)
 
 __all__ = ["read_tns", "write_tns", "iter_tns_batches", "DATASET_PROFILES",
-           "make_profile_tensor"]
+           "make_profile_tensor", "make_lowrank_tensor"]
 
 # Lines parsed per batch. Each batch becomes two ndarray chunks immediately,
 # so peak Python-object overhead is O(chunk_lines), not O(nnz) — at billion
@@ -162,3 +162,52 @@ def make_profile_tensor(name: str, *, scale: float = 1e-3, seed: int = 0) -> Spa
     shape, nnz = profile_geometry(name, scale)
     return random_sparse(
         shape, nnz, seed=seed, distribution=p.distribution, zipf_a=p.zipf_a)
+
+
+def make_lowrank_tensor(shape, rank: int, nnz: int, *,
+                        seed: int = 0) -> SparseTensor:
+    """A sparse tensor that IS an exact CP model of the given rank.
+
+    Each mode is split into ``rank`` contiguous segments; component ``r``
+    is a (weighted) indicator of a random row subset of segment ``r`` in
+    every mode, so the model is ``rank`` disjoint aligned blocks. The
+    nonzeros enumerate every cell of every block (~``nnz`` total, subset
+    sizes chosen per block) — including the zeros elsewhere, the dense
+    completion is exactly rank-R. Nonzero order is shuffled so prefix
+    splits (base store + append) mix all blocks.
+
+    This is the fixture refresh/serving tests need: CP-ALS at the same
+    rank converges to fit ≈ 1 from any reasonable start, so a warm-start
+    refit and a from-scratch refit land within tight tolerance of each
+    other — unlike random-valued tensors, whose low-fit local optima make
+    cross-run fit agreement meaningless.
+    """
+    shape = tuple(int(s) for s in shape)
+    nmodes = len(shape)
+    if any(s < rank for s in shape):
+        raise ValueError(f"every mode of {shape} must have >= rank={rank} "
+                         f"rows (one segment per component)")
+    rng = np.random.default_rng(seed)
+    bounds = [np.linspace(0, s, rank + 1).astype(np.int64) for s in shape]
+    # distinct per-component weights so components are distinguishable
+    weights = np.linspace(0.5, 1.5, rank)
+    cells_per = max(nnz // rank, 1)
+    inds, vals = [], []
+    for r in range(rank):
+        seg_len = [int(bounds[d][r + 1] - bounds[d][r])
+                   for d in range(nmodes)]
+        m = [min(L, max(1, int(round(cells_per ** (1.0 / nmodes)))))
+             for L in seg_len]
+        # adjust the largest mode so the block lands near cells_per
+        rest = int(np.prod(m[:-1]))
+        m[-1] = min(seg_len[-1], max(1, int(round(cells_per / rest))))
+        rows = [np.sort(rng.choice(seg_len[d], size=m[d], replace=False)
+                        + bounds[d][r]) for d in range(nmodes)]
+        grid = np.meshgrid(*rows, indexing="ij")
+        block = np.stack([g.ravel() for g in grid], axis=1)
+        inds.append(block)
+        vals.append(np.full(block.shape[0], weights[r], np.float32))
+    ind = np.concatenate(inds)
+    val = np.concatenate(vals)
+    order = rng.permutation(ind.shape[0])
+    return SparseTensor(ind[order].astype(np.int32), val[order], shape)

@@ -36,11 +36,11 @@ from repro.store.plan import (ModeStreamPlan, OutOfCoreError,
                               build_plan_from_store, resident_shard_nbytes,
                               split_mode_super_shards, stream_shard_nbytes)
 from repro.store.store import TensorStore
-from repro.store.writer import (StoreWriter, convert_tns,
+from repro.store.writer import (StoreWriter, append_to_store, convert_tns,
                                 write_profile_store, write_store_from_coo)
 
 __all__ = [
-    "TensorStore", "StoreWriter", "StoreFormatError",
+    "TensorStore", "StoreWriter", "StoreFormatError", "append_to_store",
     "convert_tns", "write_store_from_coo", "write_profile_store",
     "OutOfCoreError", "StoreModePartition", "build_plan_from_store",
     "ModeStreamPlan", "split_mode_super_shards", "stream_shard_nbytes",

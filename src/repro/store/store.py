@@ -27,7 +27,14 @@ class TensorStore:
 
     def __init__(self, path: str):
         self.path = path
-        self.manifest = fmt.load_manifest(path)
+        self._bind(fmt.load_manifest(path))
+        self.access_stats = {"chunk_reads": 0, "nnz_read": 0, "hist_reads": 0}
+
+    def _bind(self, manifest: dict) -> None:
+        """(Re)bind memmaps and cached stats to ``manifest`` — the shared
+        body of ``__init__`` and :meth:`refresh`."""
+        path = self.path
+        self.manifest = manifest
         m = self.manifest
         self.shape: tuple[int, ...] = tuple(int(s) for s in m["shape"])
         self.nnz: int = int(m["nnz"])
@@ -60,7 +67,73 @@ class TensorStore:
                                   ).reshape(self.num_chunks, self.nmodes)
         self.chunk_max = np.array([c["max"] for c in m["chunks"]], np.int64
                                   ).reshape(self.num_chunks, self.nmodes)
-        self.access_stats = {"chunk_reads": 0, "nnz_read": 0, "hist_reads": 0}
+
+    # -- growth ------------------------------------------------------------
+    def refresh(self) -> dict | None:
+        """Pick up an in-place append (:func:`repro.store.append_to_store`).
+
+        Re-reads the manifest; returns ``None`` when the digest is
+        unchanged (no-op, memmaps untouched). When the store grew, rebinds
+        every memmap and cached stat to the new manifest and returns the
+        delta a refresher needs::
+
+            {"old_nnz", "new_nnz", "appended_nnz",
+             "old_digest", "new_digest",
+             "first_changed_chunk",   # chunks >= this index are new/re-stat
+             "old_num_chunks", "new_num_chunks"}
+
+        Raises :class:`~repro.store.format.StoreFormatError` if the
+        manifest changed in any way other than an append (shape, chunking
+        or dtypes differ, or nnz shrank) — that is a rewritten store, and
+        a reader holding derived state (plans, snapshots) must not
+        silently adopt it."""
+        manifest = fmt.load_manifest(self.path)
+        if manifest["digest"] == self.digest:
+            return None
+        if tuple(int(s) for s in manifest["shape"]) != self.shape:
+            raise fmt.StoreFormatError(
+                f"store at {self.path!r} changed shape "
+                f"{self.shape} -> {tuple(manifest['shape'])}; refresh() "
+                f"only follows appends — reopen a new TensorStore")
+        if int(manifest["chunk_nnz"]) != self.chunk_nnz or \
+                list(manifest["index_dtypes"]) != self.index_dtypes:
+            raise fmt.StoreFormatError(
+                f"store at {self.path!r} changed chunking/dtypes under a "
+                f"live reader; refresh() only follows appends")
+        if int(manifest["nnz"]) < self.nnz:
+            raise fmt.StoreFormatError(
+                f"store at {self.path!r} shrank ({self.nnz} -> "
+                f"{manifest['nnz']} nnz); refresh() only follows appends")
+        old_nnz, old_digest = self.nnz, self.digest
+        old_chunks = self.num_chunks
+        self._bind(manifest)
+        return {
+            "old_nnz": old_nnz,
+            "new_nnz": self.nnz,
+            "appended_nnz": self.nnz - old_nnz,
+            "old_digest": old_digest,
+            "new_digest": self.digest,
+            # floor(old_nnz / chunk_nnz): the partial tail chunk when one
+            # existed, else the first brand-new chunk
+            "first_changed_chunk": old_nnz // self.chunk_nnz,
+            "old_num_chunks": old_chunks,
+            "new_num_chunks": self.num_chunks,
+        }
+
+    def appended_mode_rows(self, old_nnz: int) -> list[np.ndarray]:
+        """Per-mode sorted unique global indices appearing in rows
+        ``[old_nnz, nnz)`` — the rows an incremental refit must re-solve
+        (every other row's dense normal equations are unchanged up to the
+        appended rows' contributions to the Gram matrices). O(appended)
+        read, counted in :attr:`access_stats`."""
+        if not 0 <= old_nnz <= self.nnz:
+            raise ValueError(f"old_nnz {old_nnz} outside [0, {self.nnz}]")
+        out = []
+        for d in range(self.nmodes):
+            out.append(np.unique(
+                np.asarray(self._cols[d][old_nnz:self.nnz], np.int64)))
+        self.access_stats["nnz_read"] += (self.nnz - old_nnz) * self.nmodes
+        return out
 
     # -- SparseTensor-compatible surface ----------------------------------
     @property

@@ -30,8 +30,23 @@ from repro.sparse.io import (DATASET_PROFILES, draw_sparse_block,
                              iter_tns_batches, profile_geometry)
 from repro.store import format as fmt
 
-__all__ = ["StoreWriter", "convert_tns", "write_store_from_coo",
-           "write_profile_store"]
+__all__ = ["StoreWriter", "append_to_store", "convert_tns",
+           "write_store_from_coo", "write_profile_store"]
+
+
+def _chunk_stats(ind: np.ndarray, shape: tuple[int, ...],
+                 bins: int) -> dict:
+    """Per-chunk manifest stats for one chunk's ``(k, nmodes)`` indices:
+    per-mode min/max plus the coarse fixed-bin histogram."""
+    stats = {"nnz": int(ind.shape[0]), "min": [], "max": [], "hist": []}
+    for d, size in enumerate(shape):
+        col = ind[:, d]
+        stats["min"].append(int(col.min()))
+        stats["max"].append(int(col.max()))
+        edges = np.linspace(0, size, bins + 1)
+        bh, _ = np.histogram(col, bins=edges)
+        stats["hist"].append([int(x) for x in bh])
+    return stats
 
 
 class StoreWriter:
@@ -122,21 +137,15 @@ class StoreWriter:
 
     def _flush_chunk(self, k: int) -> None:
         ind, val = self._take(k)
-        stats = {"nnz": int(k), "min": [], "max": [], "hist": []}
-        bins = self.hist_bins
+        # coarse fixed-bin per-chunk histogram: skew at a glance without
+        # the exact sidecar
+        stats = _chunk_stats(ind, self.shape, self.hist_bins)
         for d in range(self.nmodes):
             col = ind[:, d]
             self._mode_files[d].write(
                 np.ascontiguousarray(col.astype(self.index_dtypes[d])
                                      ).tobytes())
             np.add.at(self._hists[d], col, 1)
-            stats["min"].append(int(col.min()))
-            stats["max"].append(int(col.max()))
-            # coarse fixed-bin histogram over [0, mode size): skew at a
-            # glance without the exact sidecar
-            edges = np.linspace(0, self.shape[d], bins + 1)
-            bh, _ = np.histogram(col, bins=edges)
-            stats["hist"].append([int(x) for x in bh])
         self._val_file.write(np.ascontiguousarray(
             val.astype(fmt.VALUE_DTYPE)).tobytes())
         self._values_sumsq += float((val.astype(np.float64) ** 2).sum())
@@ -201,6 +210,104 @@ class StoreWriter:
             self.close()
         else:
             self.abort()
+
+
+# -- in-place growth ------------------------------------------------------
+
+def append_to_store(path: str, indices: np.ndarray,
+                    values: np.ndarray) -> dict:
+    """Append nonzeros to an EXISTING store in place (the growing-tensor
+    ingest path serving refreshes against).
+
+    The data files grow by plain byte appends; the partial tail chunk (if
+    any) absorbs the first new rows, so its manifest stats are recomputed
+    from the old tail plus the new batch. Exact histogram sidecars and the
+    Frobenius accumulator are updated incrementally; the manifest (with a
+    fresh digest) is written LAST — so :meth:`TensorStore.refresh` on a
+    live reader sees either the old store or the complete new one.
+
+    Not crash-atomic the way a fresh :class:`StoreWriter` is: a crash
+    after the byte appends but before the manifest rename leaves data
+    files longer than the manifest implies, which the reader's size check
+    rejects as a stale store (re-ingest to recover). Returns the updated
+    manifest.
+    """
+    manifest = fmt.load_manifest(path)
+    shape = tuple(int(s) for s in manifest["shape"])
+    nmodes = len(shape)
+    chunk_nnz = int(manifest["chunk_nnz"])
+    bins = int(manifest.get("hist_bins", fmt.CHUNK_HIST_BINS))
+    hist_dtype = manifest.get("hist_dtype", fmt.HIST_DTYPE)
+
+    ind = np.asarray(indices)
+    val = np.asarray(values, np.float32)
+    if ind.ndim != 2 or ind.shape[1] != nmodes:
+        raise ValueError(f"indices must be (k, {nmodes}), got {ind.shape}")
+    if val.shape != (ind.shape[0],):
+        raise ValueError("values must align with indices")
+    if ind.shape[0] == 0:
+        return manifest
+    ind = ind.astype(np.int64, copy=False)
+    if int(ind.min()) < 0:
+        raise ValueError("negative index")
+    mx = ind.max(axis=0)
+    if (mx >= np.asarray(shape)).any():
+        raise ValueError(f"index out of range for shape {shape}: "
+                         f"per-mode max {tuple(int(x) for x in mx)}")
+
+    old_nnz = int(manifest["nnz"])
+    rem = old_nnz % chunk_nnz
+    first_changed = old_nnz // chunk_nnz  # == full-chunk count either way
+
+    # the partial tail chunk's rows re-enter stat computation
+    if rem:
+        tail_ind = np.empty((rem, nmodes), np.int64)
+        for d in range(nmodes):
+            col = np.memmap(os.path.join(path, fmt.mode_data_name(d)),
+                            dtype=manifest["index_dtypes"][d], mode="r")
+            tail_ind[:, d] = col[old_nnz - rem:old_nnz]
+            del col
+        stat_ind = np.concatenate([tail_ind, ind])
+    else:
+        stat_ind = ind
+
+    for d in range(nmodes):
+        with open(os.path.join(path, fmt.mode_data_name(d)), "ab") as f:
+            f.write(np.ascontiguousarray(
+                ind[:, d].astype(manifest["index_dtypes"][d])).tobytes())
+            f.flush()
+            os.fsync(f.fileno())
+    with open(os.path.join(path, fmt.VALUES_NAME), "ab") as f:
+        f.write(np.ascontiguousarray(val.astype(
+            manifest.get("value_dtype", fmt.VALUE_DTYPE))).tobytes())
+        f.flush()
+        os.fsync(f.fileno())
+
+    # exact per-mode histograms: += new rows only (tail already counted);
+    # written atomically so a concurrent reader never maps a torn sidecar
+    for d in range(nmodes):
+        hpath = os.path.join(path, fmt.mode_hist_name(d))
+        h = np.fromfile(hpath, dtype=hist_dtype).astype(np.int64)
+        np.add.at(h, ind[:, d], 1)
+        tmp = hpath + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(np.ascontiguousarray(h.astype(hist_dtype)).tobytes())
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, hpath)
+
+    chunks = list(manifest["chunks"][:first_changed])
+    for s in range(0, stat_ind.shape[0], chunk_nnz):
+        chunks.append(_chunk_stats(stat_ind[s:s + chunk_nnz], shape, bins))
+
+    new_manifest = dict(manifest)
+    new_manifest.pop("digest", None)
+    new_manifest["nnz"] = old_nnz + int(ind.shape[0])
+    new_manifest["chunks"] = chunks
+    new_manifest["values_sumsq"] = float(manifest["values_sumsq"]) + \
+        float((val.astype(np.float64) ** 2).sum())
+    fmt.save_manifest(path, new_manifest)
+    return fmt.load_manifest(path)
 
 
 # -- converters ----------------------------------------------------------

@@ -73,6 +73,7 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: threading.Thread | None = None
+        self._save_exc: BaseException | None = None
         os.makedirs(directory, exist_ok=True)
 
     # -- paths -------------------------------------------------------------
@@ -91,22 +92,54 @@ class CheckpointManager:
 
     # -- save --------------------------------------------------------------
     def save(self, step: int, payload: Any, *, block: bool = True) -> None:
+        """Write checkpoint ``step`` atomically (temp dir → fsync → rename).
+
+        Blocking semantics: the save runs on a background thread ONLY when
+        the manager was built with ``async_save=True`` AND ``block=False``;
+        every other combination runs synchronously on the caller's thread
+        (``block=True`` is the safe default even on an async manager — e.g.
+        a final checkpoint before exit). The async hand-off is
+        double-buffered: at most one save is in flight, so ``save()`` first
+        waits for the previous one — meaning a failure in save *k* surfaces
+        as an exception from the ``save(k+1)`` or :meth:`wait` call that
+        joins it, not silently from a daemon thread. ``payload`` is
+        flattened to numpy arrays before the method returns, so the caller
+        may mutate its arrays immediately after an async hand-off."""
         if self.async_save and not block:
             self.wait()
-            self._thread = threading.Thread(
-                target=self._save_sync, args=(step, payload), daemon=True)
+            # flatten + copy on the caller's thread: the background save
+            # then owns private arrays, immune to caller-side mutation
+            flat = {k: np.array(v) for k, v in _tree_flatten(payload).items()}
+
+            def run() -> None:
+                try:
+                    self._save_sync_flat(step, flat)
+                except BaseException as e:  # surfaced by the next wait()
+                    self._save_exc = e
+
+            self._thread = threading.Thread(target=run, daemon=True)
             self._thread.start()
         else:
             self.wait()
             self._save_sync(step, payload)
 
     def wait(self) -> None:
+        """Join any in-flight async save. Re-raises the exception the save
+        thread hit, if any — without this a failed async save would be
+        silently dropped and the training loop would believe the
+        checkpoint exists. Idempotent; a raised exception is cleared (the
+        next wait() does not re-raise it)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._save_exc is not None:
+            exc, self._save_exc = self._save_exc, None
+            raise exc
 
     def _save_sync(self, step: int, payload: Any) -> None:
-        flat = _tree_flatten(payload)
+        self._save_sync_flat(step, _tree_flatten(payload))
+
+    def _save_sync_flat(self, step: int, flat: dict[str, np.ndarray]) -> None:
         final = self._step_dir(step)
         tmp = final + ".tmp"
         if os.path.exists(tmp):
