@@ -1,20 +1,36 @@
-"""EC kernel-variant microbenchmark: ref vs blocked vs fused.
+"""EC kernel-variant microbenchmark: ref vs blocked vs fused vs sorted.
 
     PYTHONPATH=src python -m benchmarks.bench_mttkrp [--quick]
 
-For every (nmodes, rank, nnz) grid point the three EC variants run on the
-same partitioned shard; the report carries, per variant:
+For every (nmodes, rank, nnz) grid point the four EC variants run on the
+same partitioned shard (``sorted`` on its row-sorted layout of the same
+tensor and geometry); the report carries, per variant:
 
   * wall time (best of ``repeats``) and GFLOP/s
     (flops = nnz · R · nin Hadamard multiplies + nnz · R accumulates),
+  * modelled FLOPs: the one-hot variants (blocked/fused) commit each block
+    through a ``(tile, block_p) @ (block_p, R)`` matmul — ``2·nnz·tile·R``
+    pure scatter FLOPs the segmented-reduction variants (ref/sorted) do not
+    spend (asserted: no one-hot term in their model),
   * *modelled* HBM bytes moved and the resulting effective GB/s — the
     gather-traffic analysis of EXPERIMENTS.md §Perf. The blocked variant
     both writes and re-reads an (nnz, R) gathered intermediate per input
-    mode (2·nnz·nin·R·4 bytes); the fused variant streams each factor row
-    exactly once (nnz·nin·R·4), so its modelled traffic is strictly lower —
-    asserted here and recorded machine-readably,
+    mode (2·nnz·nin·R·4 bytes); fused and sorted stream each factor row
+    exactly once (nnz·nin·R·4). Sorted additionally replaces the per-slot
+    row array (nnz·4) with per-block segment descriptors
+    (nblocks·(2·tile+3)·4 ≪ nnz·4) and writes each output row once instead
+    of rewriting the output tile per block — so
+    ``modelled_hbm_bytes(sorted) < modelled_hbm_bytes(fused)`` strictly,
+    asserted at every point and recorded machine-readably,
   * an HLO check: ``gather_free`` is True iff the lowered computation
     contains no XLA gather op (no materialized intermediate exists).
+
+Each point also times the ``ref`` XLA path on the sorted shard with and
+without the ``segment_sum(indices_are_sorted=True)`` hint — bit-identical
+by construction (asserted), and real XLA CPU wall time, so hint parity or
+better is the one wall-clock claim this container can honestly make
+(``ref_sorted_hint.parity``); the Pallas variants run in interpret mode
+off-TPU, where absolute times are meaningless.
 
 A second scenario exercises the *scheduler*: on a synthetic hot-index
 (skewed) tensor with 4 forced host devices, CP-ALS runs with the dynamic
@@ -73,10 +89,10 @@ import numpy as np
 
 from benchmarks.common import run_subprocess_bench, save_result, timeit
 
-VARIANTS = ("ref", "blocked", "fused")
+VARIANTS = ("ref", "blocked", "fused", "sorted")
 
 SKEW_SCRIPT = r"""
-import json
+import json, time
 import numpy as np
 import jax
 assert jax.device_count() == 4, jax.device_count()
@@ -114,6 +130,30 @@ for label, rebalance in (("off", "measure"), ("on", "on")):
                              for e in solver.schedule_events)),
         "rebalance_epoch": int(solver.plan.rebalance_epoch),
     }}
+
+# sorted-variant A/B on the same skewed tensor: ref (XLA segment_sum with
+# the sorted hint) vs the ec_sorted Pallas kernel, SAME row-sorted plan —
+# factors must match bit-for-bit; wall times ride along (off-TPU the Pallas
+# kernel runs in interpret mode, so only the bit-equality is gated there).
+ab_base = api.paper({{"rank": 8, "runtime.tol": 0.0,
+                      "partition.strategy": "equal_nnz",
+                      "partition.layout": "sorted"}})
+ab, facs = {{}}, {{}}
+for name, cfg in (
+        ("ref", ab_base),
+        ("sorted", ab_base.with_overrides({{"kernel.use_kernel": True,
+                                            "kernel.variant": "sorted"}}))):
+    solver = api.compile(api.plan(t, cfg), cfg)
+    solver.run(1)                       # compile + warm every mode
+    solver.reset()
+    t0 = time.perf_counter()
+    res = solver.run({ab_sweeps})
+    ab[name] = {{"per_sweep_s": (time.perf_counter() - t0) / {ab_sweeps},
+                 "fit": float(res.fits[-1])}}
+    facs[name] = [np.asarray(f) for f in res.factors]
+ab["factors_bitwise_equal"] = bool(all(
+    (a == b).all() for a, b in zip(facs["ref"], facs["sorted"])))
+out["sorted_ab"] = ab
 print("RESULT_JSON:" + json.dumps(out))
 """
 
@@ -529,11 +569,15 @@ def bench_serve_load(*, nnz: int = 6000, rows: int = 8192,
     return result
 
 
-def bench_skew_rebalance(*, nnz: int = 40000, sweeps: int = 6) -> dict:
+def bench_skew_rebalance(*, nnz: int = 40000, sweeps: int = 6,
+                         ab_sweeps: int = 2) -> dict:
     """Rebalancer A/B on a hot-index tensor, 4 forced host devices (its own
-    subprocess — the main process must keep a single device)."""
+    subprocess — the main process must keep a single device). The same
+    subprocess also runs the sorted-variant A/B (ref vs ec_sorted on one
+    row-sorted plan, bit-identical factors gated by CI)."""
     result = run_subprocess_bench(
-        SKEW_SCRIPT.format(nnz=nnz, sweeps=sweeps), devices=4)
+        SKEW_SCRIPT.format(nnz=nnz, sweeps=sweeps, ab_sweeps=ab_sweeps),
+        devices=4)
     off, on = result["off"], result["on"]
     result["final_imbalance_off"] = off["imbalance_per_point"][-1]
     result["final_imbalance_on"] = on["imbalance_per_point"][-1]
@@ -553,25 +597,67 @@ def _flops(nnz: int, rank: int, nin: int) -> int:
     return nnz * rank * (nin + 1)
 
 
+def modelled_flops(variant: str, nnz: int, rank: int, nin: int,
+                   tile: int) -> int:
+    """Per-variant FLOP model. All variants spend the useful
+    ``nnz·R·(nin+1)`` (Hadamard products + accumulate). The one-hot
+    variants (blocked/fused) additionally commit every block through a
+    ``(tile, block_p) @ (block_p, R)`` matmul — ``2·nnz·tile·R`` pure
+    scatter FLOPs. The segmented-reduction variants (ref's ``segment_sum``,
+    sorted's in-register accumulation) carry NO one-hot scatter term."""
+    useful = _flops(nnz, rank, nin)
+    if variant in ("blocked", "fused"):
+        return useful + 2 * nnz * tile * rank
+    return useful
+
+
 def modelled_hbm_bytes(variant: str, nnz: int, rank: int, nin: int,
-                       num_rows: int, num_buffers: int = 2) -> int:
+                       num_rows: int, num_buffers: int = 2, *,
+                       tile: int, block_p: int) -> int:
     """HBM traffic model for one EC call (f32=4B, i32=4B).
 
-    Common terms: values read (nnz·4), output tile writes (num_rows·R·4).
-    Index reads: nnz·nin·4, except the fused kernel's lookahead BlockSpecs
-    stream each index slab ``num_buffers`` times (blocks 0..L-1's slices
-    transit once per lookahead view). Factor-row traffic differs:
-      ref/blocked  gather writes (nnz·nin·R·4) + kernel re-reads them
-      fused        each row read from HBM exactly once, streamed
-    Fused stays strictly below blocked whenever num_buffers - 1 < R + 1,
-    i.e. always for practical ring depths.
+    Common terms: values read (nnz·4). Index reads: nnz·nin·4, except the
+    in-kernel-gather variants' (fused/sorted) lookahead BlockSpecs stream
+    each index slab ``num_buffers`` times (blocks 0..L-1's slices transit
+    once per lookahead view). Factor-row traffic:
+      ref/blocked    gather writes (nnz·nin·R·4) + kernel re-reads them
+      fused/sorted   each row read from HBM exactly once, streamed
+    Row-targeting metadata:
+      ref/blocked/fused  one i32 per slot (local_rows / row_in_tile): nnz·4
+      sorted             per-block segment descriptors only:
+                         nblocks·(2·tile+3)·4 — (tile+2) seg starts +
+                         (tile+1) seg rows per block, ≪ nnz·4
+    Output commits:
+      ref      segment_sum writes each row once: num_rows·R·4
+      blocked/fused  the one-hot matmul rewrites (reads + writes) the
+               output tile once per BLOCK: 2·nblocks·tile·R·4
+      sorted   each row written exactly once, plus one accumulator row
+               re-read per cross-block segment (≤ 1/block):
+               num_rows·R·4 + nblocks·R·4
+    Sorted stays strictly below fused: the descriptor read is smaller than
+    the per-slot row array whenever block_p > 2·tile+3 (always, for the
+    supported geometries), and single-write output beats per-block tile
+    rewrite whenever num_rows < nblocks·(2·tile−1).
     """
-    common = nnz * 4 + num_rows * rank * 4
+    nblocks = nnz // block_p
+    vals_bytes = nnz * 4
     idx_bytes = nnz * nin * 4
     row_bytes = nnz * nin * rank * 4
+    slot_rows_bytes = nnz * 4
+    seg_bytes = nblocks * (2 * tile + 3) * 4
+    out_once = num_rows * rank * 4
+    out_per_block = 2 * nblocks * tile * rank * 4
+    if variant == "sorted":
+        return (vals_bytes + seg_bytes + num_buffers * idx_bytes + row_bytes
+                + out_once + nblocks * rank * 4)
     if variant == "fused":
-        return common + num_buffers * idx_bytes + row_bytes
-    return common + idx_bytes + 2 * row_bytes
+        return (vals_bytes + slot_rows_bytes + num_buffers * idx_bytes
+                + row_bytes + out_per_block)
+    if variant == "blocked":
+        return (vals_bytes + slot_rows_bytes + idx_bytes + 2 * row_bytes
+                + out_per_block)
+    return (vals_bytes + slot_rows_bytes + idx_bytes + 2 * row_bytes
+            + out_once)
 
 
 def _gather_free(run, args) -> bool:
@@ -582,17 +668,30 @@ def _gather_free(run, args) -> bool:
 def bench_point(nmodes: int, rank: int, nnz: int, *, repeats: int = 3,
                 seed: int = 0) -> dict:
     from repro.api import KernelConfig
+    from repro.core.partition import block_segment_descriptors
     from repro.kernels import ops as kops
     from repro.kernels.autotune import representative_shard
 
     t, part = representative_shard(nmodes, nnz, seed=seed)
+    # same tensor, same blocking geometry, row-sorted pad placement
+    _, part_s = representative_shard(nmodes, nnz, seed=seed, layout="sorted")
+    assert (part_s.tile, part_s.block_p) == (part.tile, part.block_p)
     rng = np.random.default_rng(seed + 1)
     factors = [jnp.asarray(rng.normal(size=(s, rank)).astype(np.float32))
                for s in t.shape]
-    args = (jnp.asarray(part.indices[0]), jnp.asarray(part.values[0]),
-            jnp.asarray(part.local_rows[0]),
-            jnp.asarray(part.block_to_tile[0]), factors)
+
+    def shard_args(p):
+        return (jnp.asarray(p.indices[0]), jnp.asarray(p.values[0]),
+                jnp.asarray(p.local_rows[0]),
+                jnp.asarray(p.block_to_tile[0]), factors)
+
+    args = shard_args(part)
+    args_s = shard_args(part_s)
     mask = jnp.asarray(part.tile_visited[0])
+    ss, sr = block_segment_descriptors(part_s.local_rows[0], tile=part.tile,
+                                       block_p=part.block_p)
+    seg_kw = dict(seg_starts=jnp.asarray(ss), seg_rows=jnp.asarray(sr),
+                  rows_sorted=True)
     nin = nmodes - 1
     nnz_pad = part.nnz_max  # post-padding nonzeros actually streamed
     flops = _flops(nnz_pad, rank, nin)
@@ -600,10 +699,14 @@ def bench_point(nmodes: int, rank: int, nnz: int, *, repeats: int = 3,
     point = {"nmodes": nmodes, "rank": rank, "nnz": nnz,
              "nnz_padded": nnz_pad, "tile": part.tile,
              "block_p": part.block_p, "variants": {}}
+    outs = {}
     for variant in VARIANTS:
         # resolve variant + ring depth the way the public API does
         kernel_kw = KernelConfig(use_kernel=True, variant=variant
                                  ).mttkrp_kwargs(nmodes=nmodes, rank=rank)
+        if variant == "sorted":
+            kernel_kw = {**kernel_kw, **seg_kw}
+        vargs = args_s if variant == "sorted" else args
 
         def run(indices, values, local_rows, block_to_tile, facs,
                 _kw=kernel_kw):
@@ -613,21 +716,61 @@ def bench_point(nmodes: int, rank: int, nnz: int, *, repeats: int = 3,
                 block_p=part.block_p, tile_mask=mask, **_kw)
 
         jitted = jax.jit(run)
-        dt = timeit(lambda: jitted(*args).block_until_ready(),
+        outs[variant] = np.asarray(jitted(*vargs))
+        dt = timeit(lambda: jitted(*vargs).block_until_ready(),
                     repeats=repeats)
         hbm = modelled_hbm_bytes(variant, nnz_pad, rank, nin, part.rows_max,
-                                 num_buffers=kernel_kw["num_buffers"])
+                                 num_buffers=kernel_kw["num_buffers"],
+                                 tile=part.tile, block_p=part.block_p)
         point["variants"][variant] = {
             "time_s": dt,
             "gflops_per_s": flops / dt / 1e9,
+            "modelled_flops": modelled_flops(variant, nnz_pad, rank, nin,
+                                             part.tile),
             "modelled_hbm_bytes": hbm,
             "effective_hbm_gb_per_s": hbm / dt / 1e9,
-            "gather_free": _gather_free(run, args),
+            "gather_free": _gather_free(run, vargs),
         }
+
+    # ref on the sorted shard, with vs without the segment_sum hint: real
+    # XLA CPU wall time (no interpret mode), bit-identical by construction
+    def run_ref(indices, values, local_rows, block_to_tile, facs, *,
+                hint):
+        return kops.mttkrp_local(
+            indices, values, local_rows, block_to_tile, facs,
+            mode=0, num_rows=part.rows_max, tile=part.tile,
+            block_p=part.block_p, tile_mask=mask, use_kernel=False,
+            variant="ref", rows_sorted=hint)
+
+    j_plain = jax.jit(lambda *a: run_ref(*a, hint=False))
+    j_hint = jax.jit(lambda *a: run_ref(*a, hint=True))
+    assert np.array_equal(np.asarray(j_plain(*args_s)),
+                          np.asarray(j_hint(*args_s)))
+    t_plain = timeit(lambda: j_plain(*args_s).block_until_ready(),
+                     repeats=max(repeats, 3))
+    t_hint = timeit(lambda: j_hint(*args_s).block_until_ready(),
+                    repeats=max(repeats, 3))
+    point["ref_sorted_hint"] = {
+        "time_unhinted_s": t_plain,
+        "time_hinted_s": t_hint,
+        "speedup": t_plain / t_hint,
+        # parity or better, with a 15% wall-clock noise margin
+        "parity": t_hint <= t_plain * 1.15,
+        "bit_identical": True,  # asserted above
+    }
 
     v = point["variants"]
     assert v["fused"]["modelled_hbm_bytes"] < v["blocked"]["modelled_hbm_bytes"]
+    assert v["sorted"]["modelled_hbm_bytes"] < v["fused"]["modelled_hbm_bytes"]
+    # segmented reduction carries no one-hot scatter FLOPs
+    assert v["sorted"]["modelled_flops"] == v["ref"]["modelled_flops"]
+    assert v["sorted"]["modelled_flops"] < v["fused"]["modelled_flops"]
     assert v["fused"]["gather_free"] and not v["blocked"]["gather_free"]
+    assert v["sorted"]["gather_free"]
+    # the kernels compute the same EC bit-for-bit (sorted on its layout
+    # produces the same per-row sums as ref on that layout; ref is
+    # layout-invariant up to fp addition order, checked exactly in tests)
+    assert np.array_equal(outs["sorted"], np.asarray(j_plain(*args_s)))
     return point
 
 
@@ -659,11 +802,16 @@ def main() -> None:
     for nmodes, rank, nnz in grid:
         pt = bench_point(nmodes, rank, nnz, repeats=args.repeats)
         f, b = pt["variants"]["fused"], pt["variants"]["blocked"]
+        s, h = pt["variants"]["sorted"], pt["ref_sorted_hint"]
         print(f"nmodes={nmodes} R={rank} nnz={nnz}: "
               f"fused {f['time_s']*1e3:.2f}ms "
               f"(model {f['modelled_hbm_bytes']/1e6:.2f}MB) vs blocked "
               f"{b['time_s']*1e3:.2f}ms "
-              f"(model {b['modelled_hbm_bytes']/1e6:.2f}MB)")
+              f"(model {b['modelled_hbm_bytes']/1e6:.2f}MB); sorted model "
+              f"{s['modelled_hbm_bytes']/1e6:.2f}MB "
+              f"({s['modelled_flops']/1e6:.2f}MF vs fused "
+              f"{f['modelled_flops']/1e6:.2f}MF); ref sorted-hint "
+              f"{h['speedup']:.3f}x")
         points.append(pt)
 
     skew = None
@@ -675,7 +823,12 @@ def main() -> None:
               f"{skew['final_imbalance_off']:.3f} -> "
               f"{skew['final_imbalance_on']:.3f}, idle frac reduced by "
               f"{skew['idle_frac_reduction']:.3f}, "
-              f"{skew['on']['moved_nnz']} nnz moved")
+              f"{skew['on']['moved_nnz']} nnz moved; sorted A/B "
+              f"bit-equal={skew['sorted_ab']['factors_bitwise_equal']} "
+              f"(ref {skew['sorted_ab']['ref']['per_sweep_s']*1e3:.0f}ms vs "
+              f"sorted "
+              f"{skew['sorted_ab']['sorted']['per_sweep_s']*1e3:.0f}ms"
+              f"/sweep)")
 
     xchg = None
     if not args.skip_exchange:
@@ -746,9 +899,10 @@ def main() -> None:
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
         "notes": ("interpret-mode times are not hardware-meaningful; "
-                  "modelled_hbm_bytes + gather_free + the skew_rebalance "
-                  "ratios + the exchange volume model carry the perf claim "
-                  "off-TPU"),
+                  "modelled_hbm_bytes + modelled_flops + gather_free + the "
+                  "ref_sorted_hint segment_sum wall times + the "
+                  "skew_rebalance ratios + the exchange volume model carry "
+                  "the perf claim off-TPU"),
         "points": points,
         "skew_rebalance": skew,
         "exchange_overlap": xchg,

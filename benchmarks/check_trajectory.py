@@ -5,8 +5,16 @@
 Compares only the DETERMINISTIC metrics — the ones that carry the perf
 claim on a CPU-only CI container (wall times there are noise):
 
-* per kernel grid point and variant: ``modelled_hbm_bytes`` must not grow
-  beyond the tolerance, and ``gather_free`` must never flip True -> False;
+* per kernel grid point and variant: ``modelled_hbm_bytes`` and
+  ``modelled_flops`` must not grow beyond the tolerance, and
+  ``gather_free`` must never flip True -> False;
+* per kernel grid point, within the NEW artifact alone: the sorted
+  variant's modelled HBM bytes must stay strictly below fused's, its
+  modelled FLOPs must carry no one-hot scatter term (== ref's), and the
+  ``ref_sorted_hint.parity`` segment_sum wall-time flag must not flip
+  True -> False;
+* skew scenario: ``sorted_ab.factors_bitwise_equal`` (ref vs ec_sorted on
+  one row-sorted plan) must never flip True -> False;
 * exchange: the modelled sweep volume must not grow beyond tolerance and
   ``bf16_volume_ratio`` must stay ~half the fp32 wire volume;
 * epoch streaming: ``fits_equal`` / ``peak_within_budget`` must not flip
@@ -19,6 +27,12 @@ BOTH artifacts with matching identifying parameters — a PR that adds,
 removes, or rescales a scenario changes the trajectory's shape, not its
 direction, and must not trip the gate. Exits 1 when any compared metric
 regressed.
+
+``--verify-copy A B`` additionally fails loudly when the two named artifact
+copies (the repo-root ``BENCH_mttkrp.json`` and the
+``experiments/bench/`` original) are not byte-identical —
+benchmarks/common.py writes both from ONE serialization, so any divergence
+means a hand-edit or a torn write, not a legitimate rerun.
 """
 from __future__ import annotations
 
@@ -53,9 +67,56 @@ def compare(old: dict, new: dict, tol: float) -> tuple[int, list[str]]:
                 failures.append(
                     f"point {key} variant {var}: modelled_hbm_bytes "
                     f"{ob} -> {nb} (+{nb / ob - 1:.1%} > {tol:.0%})")
+            of, nf = ov.get("modelled_flops"), nv.get("modelled_flops")
+            if of is not None and nf is not None and _grew(of, nf, tol):
+                failures.append(
+                    f"point {key} variant {var}: modelled_flops "
+                    f"{of} -> {nf} (+{nf / of - 1:.1%} > {tol:.0%})")
             if ov.get("gather_free") and not nv.get("gather_free"):
                 failures.append(f"point {key} variant {var}: gather_free "
                                 f"flipped True -> False")
+        oh = q.get("ref_sorted_hint")
+        nh = p.get("ref_sorted_hint")
+        if oh and nh:
+            checked += 1
+            if oh.get("parity") and not nh.get("parity"):
+                failures.append(f"point {key}: ref_sorted_hint.parity "
+                                f"flipped True -> False")
+
+    # invariants of the NEW artifact alone: the sorted variant's structural
+    # perf claims must hold at every point where it was benchmarked
+    for p in new.get("points") or []:
+        key = (p["nmodes"], p["rank"], p["nnz"])
+        v = p.get("variants", {})
+        s, f, r = v.get("sorted"), v.get("fused"), v.get("ref")
+        if s and f:
+            checked += 1
+            if s["modelled_hbm_bytes"] >= f["modelled_hbm_bytes"]:
+                failures.append(
+                    f"point {key}: modelled_hbm_bytes(sorted) "
+                    f"{s['modelled_hbm_bytes']} not < fused "
+                    f"{f['modelled_hbm_bytes']}")
+        if s and r and s.get("modelled_flops") is not None \
+                and r.get("modelled_flops") is not None:
+            checked += 1
+            if s["modelled_flops"] != r["modelled_flops"]:
+                failures.append(
+                    f"point {key}: modelled_flops(sorted) "
+                    f"{s['modelled_flops']} != ref {r['modelled_flops']} "
+                    f"(one-hot scatter term crept back in)")
+
+    osk, nsk = old.get("skew_rebalance"), new.get("skew_rebalance")
+    if osk and nsk and (osk.get("nnz"), osk.get("devices")) == \
+            (nsk.get("nnz"), nsk.get("devices")):
+        oab = osk.get("sorted_ab") or {}
+        nab = nsk.get("sorted_ab") or {}
+        if oab and nab:
+            checked += 1
+            if oab.get("factors_bitwise_equal") and \
+                    not nab.get("factors_bitwise_equal"):
+                failures.append("skew_rebalance.sorted_ab."
+                                "factors_bitwise_equal flipped "
+                                "True -> False")
 
     oe, ne = old.get("exchange_overlap"), new.get("exchange_overlap")
     if oe and ne and (oe.get("nnz"), oe.get("rank"), oe.get("devices")) == \
@@ -99,6 +160,14 @@ def compare(old: dict, new: dict, tol: float) -> tuple[int, list[str]]:
     return checked, failures
 
 
+def artifact_copies_diverged(a: str, b: str) -> bool:
+    """True when the two artifact files are not byte-identical.
+    benchmarks/common.py writes both copies from one serialization, so any
+    difference is a hand-edit or torn write, never a legitimate rerun."""
+    with open(a, "rb") as fa, open(b, "rb") as fb:
+        return fa.read() != fb.read()
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail when NEW regresses OLD's deterministic metrics")
@@ -106,12 +175,24 @@ def main(argv=None) -> int:
     ap.add_argument("new")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed fractional growth (default 0.10)")
+    ap.add_argument("--verify-copy", nargs=2, metavar=("A", "B"),
+                    default=None,
+                    help="fail if these two artifact copies (root vs "
+                         "experiments/bench) are not byte-identical")
     args = ap.parse_args(argv)
     with open(args.old) as f:
         old = json.load(f)
     with open(args.new) as f:
         new = json.load(f)
     checked, failures = compare(old, new, args.tolerance)
+    if args.verify_copy is not None:
+        checked += 1
+        a, b = args.verify_copy
+        if artifact_copies_diverged(a, b):
+            failures.append(f"artifact copies diverged: {a} != {b} "
+                            f"(benchmarks/common.py writes both from one "
+                            f"serialization — rerun the bench, do not "
+                            f"hand-edit)")
     for msg in failures:
         print(f"REGRESSION: {msg}")
     print(f"trajectory: {checked} comparable metric groups, "

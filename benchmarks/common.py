@@ -56,16 +56,28 @@ def run_subprocess_bench(script: str, *, devices: int = 8,
 
 
 def save_result(name: str, payload: dict, *, also_root: bool = False) -> None:
-    """Write ``experiments/bench/<name>.json``; with ``also_root`` a copy
-    also lands at the repo root (``<name>.json``) so the perf trajectory is
-    diffable across PRs without digging into experiments/."""
+    """Write ``experiments/bench/<name>.json``; with ``also_root`` a
+    byte-identical copy also lands at the repo root (``<name>.json``) so the
+    perf trajectory is diffable across PRs without digging into
+    experiments/.
+
+    The payload is serialized ONCE and both files get the same bytes via an
+    atomic tmp + fsync + rename — a crash mid-save can no longer leave the
+    two artifacts diverged (checked by benchmarks/check_trajectory.py),
+    and double-serialization drift (e.g. a dict mutated between two
+    ``json.dump`` calls) is impossible by construction."""
     os.makedirs(OUT_DIR, exist_ok=True)
+    data = json.dumps(payload, indent=1, default=str)
     paths = [os.path.join(OUT_DIR, f"{name}.json")]
     if also_root:
         paths.append(os.path.join(HERE, "..", f"{name}.json"))
     for p in paths:
-        with open(p, "w") as f:
-            json.dump(payload, f, indent=1, default=str)
+        tmp = p + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, p)
 
 
 def print_csv(name: str, rows: list[dict]) -> None:

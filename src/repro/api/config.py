@@ -16,9 +16,10 @@ sub-configs, mirroring the stages of the AMPED pipeline:
   * :class:`RuntimeConfig`   — where and how the solve runs: device count,
     checkpoint directory, convergence tolerance, RNG seed.
 
-Presets :func:`paper`, :func:`optimized` and :func:`fused` name the three
-configurations the repo ships (the paper's §5.1 setup and the two
-beyond-paper kernel paths); ``preset("paper")`` looks one up by name.
+Presets :func:`paper`, :func:`optimized`, :func:`fused` and
+:func:`sorted_ec` name the configurations the repo ships (the paper's §5.1
+setup and the beyond-paper kernel paths); ``preset("paper")`` looks one up
+by name.
 
 Configs are plain data: hashable, JSON-round-trippable (:meth:`to_dict` /
 :meth:`from_dict`) and overridable with dotted paths
@@ -43,6 +44,7 @@ __all__ = [
     "paper",
     "optimized",
     "fused",
+    "sorted_ec",
     "preset",
     "PRESETS",
     "apply_set_args",
@@ -57,6 +59,15 @@ class PartitionConfig:
     replication: int | None = 1     # None = auto per-mode pick (beyond-paper)
     tile: int | None = None         # None = partitioner default (or autotune)
     block_p: int | None = None      # None = partitioner default (or autotune)
+    layout: str = "blocked"         # pad-row placement: "blocked" | "sorted"
+                                    # ("sorted" = row-sorted hierarchical COO,
+                                    # required by kernel.variant="sorted")
+
+    def __post_init__(self):
+        if self.layout not in ("blocked", "sorted"):
+            raise ValueError(
+                f"partition.layout must be 'blocked' or 'sorted', "
+                f"got {self.layout!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,7 +130,7 @@ class KernelConfig:
     """EC kernel selection and launch parameters (see repro.kernels.ops)."""
 
     use_kernel: bool = False        # False + variant=None → "ref" (jnp oracle)
-    variant: str | None = None      # "ref" | "blocked" | "fused" | None = env
+    variant: str | None = None      # "ref"|"blocked"|"fused"|"sorted"|None=env
     num_buffers: int | None = None  # fused DMA ring depth (None = 2/autotuned)
     autotune: bool = False          # sweep (tile, block_p, num_buffers)
 
@@ -401,12 +412,26 @@ def fused(overrides: Mapping[str, Any] | None = None) -> DecomposeConfig:
     ).with_overrides(overrides or {})
 
 
-PRESETS = {"paper": paper, "optimized": optimized, "fused": fused}
+def sorted_ec(overrides: Mapping[str, Any] | None = None) -> DecomposeConfig:
+    """Beyond-paper: row-sorted hierarchical-COO layout + segmented-reduction
+    EC (each output row written once per segment, no one-hot scatter), with
+    the backend-aware autotune sweep."""
+    return DecomposeConfig(
+        partition=PartitionConfig(strategy="amped_cdf", replication=None,
+                                  layout="sorted"),
+        kernel=KernelConfig(use_kernel=True, variant="sorted", autotune=True),
+        exchange=ExchangeConfig(ring=True),
+    ).with_overrides(overrides or {})
+
+
+PRESETS = {"paper": paper, "optimized": optimized, "fused": fused,
+           "sorted": sorted_ec}
 
 
 def preset(name: str,
            overrides: Mapping[str, Any] | None = None) -> DecomposeConfig:
-    """Look up a named preset (``paper`` | ``optimized`` | ``fused``)."""
+    """Look up a named preset (``paper`` | ``optimized`` | ``fused`` |
+    ``sorted``)."""
     if name not in PRESETS:
         raise ValueError(f"unknown preset {name!r}; expected one of "
                          f"{sorted(PRESETS)}")

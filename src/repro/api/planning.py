@@ -122,6 +122,7 @@ def plan_signature(tensor: SparseTensor | TensorStore,
         "replication": config.partition.replication,
         "tile": tile,
         "block_p": block_p,
+        "layout": config.partition.layout,
         "rebalance_epoch": int(rebalance_epoch),
     }
     return hashlib.sha256(
@@ -157,8 +158,11 @@ def save_plan(p: CPPlan, path: str, *, signature: str | None = None) -> str:
         manifest["store"] = {"path": os.path.abspath(store.path),
                              "digest": store.digest}
     for d, part in enumerate(p.modes):
+        # META_FIELDS are ints except block_layout (a layout-name string)
         manifest["modes"].append(
-            {k: int(getattr(part, k)) for k in ModePartition.META_FIELDS})
+            {k: (v if isinstance(v, str) else int(v))
+             for k in ModePartition.META_FIELDS
+             for v in (getattr(part, k),)})
         if not lazy:
             for k in ModePartition.ARRAY_FIELDS:
                 arrays[f"mode{d}_{k}"] = getattr(part, k)
@@ -196,7 +200,13 @@ def load_plan(path: str, *, expect_signature: str | None = None) -> CPPlan:
         modes, g2ps, p2gs = [], [], []
         for d, meta in enumerate(manifest["modes"]):
             if not manifest.get("lazy"):
-                fields = {k: int(meta[k]) for k in ModePartition.META_FIELDS}
+                # block_layout: string, absent in manifests written before
+                # the sorted layout existed (same format version)
+                fields = {k: int(meta[k])
+                          for k in ModePartition.META_FIELDS
+                          if k != "block_layout"}
+                fields["block_layout"] = str(
+                    meta.get("block_layout", "blocked"))
                 fields.update({k: npz[f"mode{d}_{k}"]
                                for k in ModePartition.ARRAY_FIELDS})
                 modes.append(ModePartition(**fields))
@@ -246,7 +256,8 @@ def _rebind_lazy_modes(path: str, manifest: dict, g2ps, p2gs):
             global_to_padded=g2p,
             padded_to_global=np.asarray(p2gs[d], np.int64),
             rows_owned=np.bincount(owner, minlength=int(meta["n_groups"])
-                                   ).astype(np.int64)))
+                                   ).astype(np.int64),
+            block_layout=str(meta.get("block_layout", "blocked"))))
     return store_plan_mod.lazy_parts_from_layouts(store, layouts)
 
 
@@ -287,12 +298,12 @@ def plan(tensor: SparseTensor | TensorStore, config: DecomposeConfig, *,
         p = store_plan_mod.build_plan_from_store(
             tensor, nd, strategy=config.resolved_policy(),
             replication=config.partition.replication, tile=tile,
-            block_p=block_p)
+            block_p=block_p, layout=config.partition.layout)
     else:
         p = partition_mod.build_plan(
             tensor, nd, strategy=config.resolved_policy(),
             replication=config.partition.replication, tile=tile,
-            block_p=block_p)
+            block_p=block_p, layout=config.partition.layout)
     if cache_dir is not None:
         try:
             save_plan(p, os.path.join(cache_dir, sig[:32]), signature=sig)

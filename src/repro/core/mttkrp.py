@@ -29,7 +29,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import comm
 from repro.compat import shard_map
-from repro.core.partition import CPPlan, ModePartition
+from repro.core.partition import (CPPlan, ModePartition,
+                                  block_segment_descriptors)
 from repro.kernels import ops as kops
 
 __all__ = ["DeviceArrays", "cp_mesh", "shard_plan_mode", "distributed_mttkrp",
@@ -49,6 +50,11 @@ class DeviceArrays:
     local_rows: jax.Array     # (G, r, nnz_max) int32
     block_to_tile: jax.Array  # (G, r, nblocks) int32
     tile_visited: jax.Array   # (G, r, ntiles) f32
+    # Per-block row-segment descriptors for the "sorted" EC variant; small
+    # (O(nblocks * tile)) and derived from local_rows at shard time, never
+    # serialized (see core.partition.block_segment_descriptors).
+    seg_starts: jax.Array     # (G, r, nblocks, tile + 2) int32
+    seg_rows: jax.Array       # (G, r, nblocks, tile + 1) int32
 
 
 def cp_mesh(num_devices: int, r: int, devices=None) -> Mesh:
@@ -80,12 +86,16 @@ def shard_plan_mode(part: ModePartition, mesh: Mesh,
         return jax.device_put(reshape(x), sh)
 
     if getattr(part, "lazy", False):
-        indices, values, local_rows = _shard_lazy_mode(
+        indices, values, local_rows, seg_starts, seg_rows = _shard_lazy_mode(
             part, mesh, group_axes, sub_axis)
     else:
+        ss, sr = block_segment_descriptors(
+            part.local_rows, tile=part.tile, block_p=part.block_p)
         indices = put(part.indices, 2)
         values = put(part.values, 1)
         local_rows = put(part.local_rows, 1)
+        seg_starts = put(ss, 2)
+        seg_rows = put(sr, 2)
 
     return DeviceArrays(
         indices=indices,
@@ -93,6 +103,8 @@ def shard_plan_mode(part: ModePartition, mesh: Mesh,
         local_rows=local_rows,
         block_to_tile=put(part.block_to_tile, 1),
         tile_visited=put(part.tile_visited, 1),
+        seg_starts=seg_starts,
+        seg_rows=seg_rows,
     )
 
 
@@ -106,42 +118,53 @@ def _shard_lazy_mode(part, mesh: Mesh, group_axes, sub_axis):
     """
     g, r = part.n_groups, part.r
     nmodes = part.nmodes
+    nblocks = part.nnz_max // part.block_p
+    nseg = part.tile + 1
     shapes = {
         "indices": ((g, r, part.nnz_max, nmodes), np.int32, 2),
         "values": ((g, r, part.nnz_max), np.float32, 1),
         "local_rows": ((g, r, part.nnz_max), np.int32, 1),
+        "seg_starts": ((g, r, nblocks, nseg + 1), np.int32, 2),
+        "seg_rows": ((g, r, nblocks, nseg), np.int32, 2),
     }
     shardings = {
         k: NamedSharding(mesh, P(group_axes, sub_axis, *([None] * tr)))
         for k, (_, _, tr) in shapes.items()}
     bufs = {k: [] for k in shapes}
-    # one index map serves all three arrays: the (group, sub) placement is
+    # one index map serves all the arrays: the (group, sub) placement is
     # identical, only trailing (replicated) dims differ
     dev_map = shardings["values"].devices_indices_map(shapes["values"][0])
     for device, idx in dev_map.items():
         gg = idx[0].start or 0
         ss = idx[1].start or 0
         di, dv, dr = part.device_arrays(gg * r + ss)
+        dss, dsr = block_segment_descriptors(dr, tile=part.tile,
+                                             block_p=part.block_p)
         bufs["indices"].append(jax.device_put(di[None, None], device))
         bufs["values"].append(jax.device_put(dv[None, None], device))
         bufs["local_rows"].append(jax.device_put(dr[None, None], device))
-        del di, dv, dr  # host copy freed before the next device streams
+        bufs["seg_starts"].append(jax.device_put(dss[None, None], device))
+        bufs["seg_rows"].append(jax.device_put(dsr[None, None], device))
+        del di, dv, dr, dss, dsr  # host copy freed before the next device
     return tuple(
         jax.make_array_from_single_device_arrays(
             shapes[k][0], shardings[k], bufs[k])
-        for k in ("indices", "values", "local_rows"))
+        for k in ("indices", "values", "local_rows", "seg_starts",
+                  "seg_rows"))
 
 
 def _local_ec(part_meta: dict, indices, values, local_rows, block_to_tile,
-              tile_visited, factors, *, use_kernel: bool,
-              variant: str | None, num_buffers: int,
+              tile_visited, seg_starts, seg_rows, factors, *,
+              use_kernel: bool, variant: str | None, num_buffers: int,
               interpret: bool | None):
     return kops.mttkrp_local(
         indices, values, local_rows, block_to_tile, factors,
         mode=part_meta["mode"], num_rows=part_meta["rows_max"],
         tile=part_meta["tile"], block_p=part_meta["block_p"],
         use_kernel=use_kernel, variant=variant, num_buffers=num_buffers,
-        interpret=interpret, tile_mask=tile_visited)
+        interpret=interpret, tile_mask=tile_visited,
+        seg_starts=seg_starts, seg_rows=seg_rows,
+        rows_sorted=part_meta.get("rows_sorted", False))
 
 
 def make_mttkrp_fn(
@@ -171,22 +194,27 @@ def make_mttkrp_fn(
     variant, honoured only when no spec is given.
     """
     meta = dict(mode=part.mode, rows_max=part.rows_max, tile=part.tile,
-                block_p=part.block_p)
+                block_p=part.block_p,
+                rows_sorted=getattr(part, "block_layout",
+                                    "blocked") == "sorted")
     all_axes = tuple(group_axes) + (sub_axis,)
     if exchange_spec is None:
         exchange_spec = comm.ExchangeSpec(
             variant=comm.resolve_variant(None, ring))
 
     def local_fn(indices, values, local_rows, block_to_tile, tile_visited,
-                 *factors):
+                 seg_starts, seg_rows, *factors):
         # strip the (1,1,...) sharded leading dims added by shard_map
         indices = indices.reshape(indices.shape[-2:])
         values = values.reshape(values.shape[-1])
         local_rows = local_rows.reshape(local_rows.shape[-1])
         block_to_tile = block_to_tile.reshape(block_to_tile.shape[-1])
         tile_visited = tile_visited.reshape(tile_visited.shape[-1])
+        seg_starts = seg_starts.reshape(seg_starts.shape[-2:])
+        seg_rows = seg_rows.reshape(seg_rows.shape[-2:])
         partial = _local_ec(meta, indices, values, local_rows, block_to_tile,
-                            tile_visited, list(factors), use_kernel=use_kernel,
+                            tile_visited, seg_starts, seg_rows, list(factors),
+                            use_kernel=use_kernel,
                             variant=variant, num_buffers=num_buffers,
                             interpret=interpret)
         merged = comm.merge_partials(
@@ -196,13 +224,14 @@ def make_mttkrp_fn(
                                    **exchange_spec.gather_kwargs())
         return out
 
-    shard_spec = P(group_axes, sub_axis)
     in_specs = (
         P(group_axes, sub_axis, None, None),
         P(group_axes, sub_axis, None),
         P(group_axes, sub_axis, None),
         P(group_axes, sub_axis, None),
         P(group_axes, sub_axis, None),
+        P(group_axes, sub_axis, None, None),
+        P(group_axes, sub_axis, None, None),
     )
 
     def fn(dev: DeviceArrays, factors: Sequence[jax.Array]) -> jax.Array:
@@ -215,7 +244,8 @@ def make_mttkrp_fn(
             out_specs=P(None, None),
         )
         return shmap(dev.indices, dev.values, dev.local_rows,
-                     dev.block_to_tile, dev.tile_visited, *factors)
+                     dev.block_to_tile, dev.tile_visited, dev.seg_starts,
+                     dev.seg_rows, *factors)
 
     return fn
 
@@ -240,14 +270,17 @@ def shard_super_shard(part, stream_plan, k: int, mesh: Mesh, *, spill=None,
     """
     g, r = part.n_groups, part.r
     sp = stream_plan
+    nseg = part.tile + 1
     names = ("indices", "values", "local_rows", "block_to_tile",
-             "tile_visited")
+             "tile_visited", "seg_starts", "seg_rows")
     shapes = {
         "indices": ((g, r, sp.nnz_cap, part.nmodes), 2),
         "values": ((g, r, sp.nnz_cap), 1),
         "local_rows": ((g, r, sp.nnz_cap), 1),
         "block_to_tile": ((g, r, sp.nblocks), 1),
         "tile_visited": ((g, r, sp.n_tiles), 1),
+        "seg_starts": ((g, r, sp.nblocks, nseg + 1), 2),
+        "seg_rows": ((g, r, sp.nblocks, nseg), 2),
     }
     shardings = {
         n: NamedSharding(mesh, P(group_axes, sub_axis, *([None] * tr)))
@@ -268,6 +301,10 @@ def shard_super_shard(part, stream_plan, k: int, mesh: Mesh, *, spill=None,
                                            nblocks=sp.nblocks)
             if spill is not None and t1 > t0:
                 spill.save(part.mode, dev_id, skey, arrs)
+        # descriptors derive from the window's local_rows (arrs[2]) after
+        # any spill load, so the spill format stays 5 arrays
+        arrs = tuple(arrs) + block_segment_descriptors(
+            arrs[2], tile=part.tile, block_p=part.block_p)
         for name, a in zip(names, arrs):
             bufs[name].append(jax.device_put(a[None, None], device))
         del arrs  # host copy freed before the next device streams
@@ -310,18 +347,22 @@ def make_partial_mttkrp_fn(
     the resident path's.
     """
     meta = dict(mode=part.mode, rows_max=part.rows_max, tile=part.tile,
-                block_p=part.block_p)
+                block_p=part.block_p,
+                rows_sorted=getattr(part, "block_layout",
+                                    "blocked") == "sorted")
 
     def local_fn(acc, indices, values, local_rows, block_to_tile,
-                 tile_visited, *factors):
+                 tile_visited, seg_starts, seg_rows, *factors):
         acc = acc.reshape(acc.shape[-2:])
         indices = indices.reshape(indices.shape[-2:])
         values = values.reshape(values.shape[-1])
         local_rows = local_rows.reshape(local_rows.shape[-1])
         block_to_tile = block_to_tile.reshape(block_to_tile.shape[-1])
         tile_visited = tile_visited.reshape(tile_visited.shape[-1])
+        seg_starts = seg_starts.reshape(seg_starts.shape[-2:])
+        seg_rows = seg_rows.reshape(seg_rows.shape[-2:])
         partial = _local_ec(meta, indices, values, local_rows, block_to_tile,
-                            tile_visited, list(factors),
+                            tile_visited, seg_starts, seg_rows, list(factors),
                             use_kernel=use_kernel, variant=variant,
                             num_buffers=num_buffers, interpret=interpret)
         return (acc + partial)[None, None]
@@ -333,6 +374,8 @@ def make_partial_mttkrp_fn(
         P(group_axes, sub_axis, None),
         P(group_axes, sub_axis, None),
         P(group_axes, sub_axis, None),
+        P(group_axes, sub_axis, None, None),
+        P(group_axes, sub_axis, None, None),
     )
 
     def fn(acc: jax.Array, dev: DeviceArrays,
@@ -345,7 +388,8 @@ def make_partial_mttkrp_fn(
             out_specs=acc_spec,
         )
         return shmap(acc, dev.indices, dev.values, dev.local_rows,
-                     dev.block_to_tile, dev.tile_visited, *factors)
+                     dev.block_to_tile, dev.tile_visited, dev.seg_starts,
+                     dev.seg_rows, *factors)
 
     return fn
 

@@ -54,12 +54,27 @@ __all__ = [
     "partition_mode",
     "build_plan",
     "block_device_rows",
+    "block_segment_descriptors",
     "auto_replication",
     "validate_plan",
     "Strategy",
 ]
 
 Strategy = Literal["amped_cdf", "amped_lpt", "uniform_index", "equal_nnz"]
+
+# Block layouts. Both order each device's real nonzeros by output row (the
+# row-sorted hierarchical-COO copy of SparseTensor.sorted_by_mode, localized
+# per device); they differ only in where PAD slots point:
+#   "blocked" — pads point at their tile's FIRST row (the one-hot kernels'
+#               historical contract; rows within a block are NOT monotone).
+#   "sorted"  — pads point at the LAST real row written so far, so
+#               local_rows is globally nondecreasing per device and every
+#               block holds at most `tile + 1` row segments. This is what
+#               lets ec_sorted replace the one-hot scatter with a segmented
+#               reduction, and lets ref pass indices_are_sorted=True.
+# Pad values are 0 either way, so pads stay exact no-ops for every variant.
+Layout = Literal["blocked", "sorted"]
+DEFAULT_LAYOUT = "blocked"
 
 # Output row tile height used by the Pallas kernel; rows_max is padded to a
 # multiple of lcm(TILE, r) so both the kernel grid and the intra-group
@@ -93,6 +108,9 @@ class ModeLayout:
     global_to_padded: np.ndarray   # (I,) int64
     padded_to_global: np.ndarray   # (n_groups*rows_max,) int64, -1 pad
     rows_owned: np.ndarray         # (n_groups,) int64
+    # pad-row placement, see Layout above ("block_" prefix: on the lazy
+    # StoreModePartition the bare name `layout` is the ModeLayout itself)
+    block_layout: str = DEFAULT_LAYOUT
 
     @property
     def n_tiles(self) -> int:
@@ -112,10 +130,14 @@ def mode_layout(
     replication: int | None = None,
     tile: int | None = None,
     block_p: int | None = None,
+    layout: Layout = DEFAULT_LAYOUT,
 ) -> ModeLayout:
     """Resolve one mode's partition layout from its nnz histogram only."""
     tile = DEFAULT_TILE if tile is None else tile
     block_p = DEFAULT_BLOCK_P if block_p is None else block_p
+    if layout not in ("blocked", "sorted"):
+        raise ValueError(f"unknown block layout {layout!r} "
+                         f"(expected 'blocked' or 'sorted')")
     m = num_devices
     policy = static_policies.get_policy(strategy)
     forced_r = policy.replication(hist, m)
@@ -145,7 +167,8 @@ def mode_layout(
     return ModeLayout(
         mode=mode, num_devices=m, r=r, n_groups=n_groups, rows_max=rows_max,
         tile=tile, block_p=block_p, owner=np.asarray(owner, np.int32),
-        global_to_padded=g2p, padded_to_global=p2g, rows_owned=rows_owned)
+        global_to_padded=g2p, padded_to_global=p2g, rows_owned=rows_owned,
+        block_layout=layout)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,7 +188,7 @@ class ModePartition:
     ARRAY_FIELDS = ("indices", "values", "local_rows", "block_to_tile",
                     "tile_visited", "nnz_true", "rows_owned", "blocks_true")
     META_FIELDS = ("mode", "num_devices", "r", "n_groups", "rows_max",
-                   "tile", "block_p")
+                   "tile", "block_p", "block_layout")
     # Out-of-core counterpart (repro.store.StoreModePartition) flips this:
     # lazy partitions defer indices/values/local_rows to per-device
     # streaming materialization and reject whole-array access.
@@ -195,6 +218,7 @@ class ModePartition:
                                 # kernel actually executes (the cost model's
                                 # "slots" feature; trailing pad blocks are
                                 # revisits of an already-done tile)
+    block_layout: str = DEFAULT_LAYOUT  # pad placement ("blocked"|"sorted")
 
     @property
     def nnz_max(self) -> int:
@@ -255,11 +279,14 @@ def _assign_groups(
 
 
 def block_device_rows(lrow: np.ndarray, vals: np.ndarray, inds: np.ndarray,
-                      *, n_tiles: int, tile: int, block_p: int):
+                      *, n_tiles: int, tile: int, block_p: int,
+                      layout: Layout = DEFAULT_LAYOUT):
     """Kernel-block one device's entries (the layout contract of
     kernels/ops.py): group row-sorted entries by output tile, pad each
-    tile's run to a multiple of ``block_p`` (pad rows point at the tile's
-    first row, values 0 → exact no-ops), so no block straddles a tile.
+    tile's run to a multiple of ``block_p`` (pad values 0 → exact no-ops),
+    so no block straddles a tile. ``layout`` picks where pad slots point:
+    the tile's first row (``"blocked"``) or the last real row already
+    emitted (``"sorted"``, keeping ``rows_b`` nondecreasing).
 
     ``lrow``: (k,) local output rows in [0, n_tiles*tile); ``vals``: (k,)
     values; ``inds``: (k, N) index rows. Returns (rows_b, vals_b, inds_b,
@@ -288,12 +315,64 @@ def block_device_rows(lrow: np.ndarray, vals: np.ndarray, inds: np.ndarray,
         pick = tile_order[src:src + c]
         src += c
         rows_b[off:off + c] = lrow[pick]
-        rows_b[off + c:off + cp] = ti * tile  # no-op pad rows inside tile
+        if layout == "sorted":
+            # cp > 0 implies c > 0 (tc_pad is 0 exactly when tc is), so the
+            # last real row exists and the block stays row-monotone.
+            rows_b[off + c:off + cp] = rows_b[off + c - 1]
+        else:
+            rows_b[off + c:off + cp] = ti * tile  # no-op pad rows in tile
         vals_b[off:off + c] = vals[pick]
         inds_b[off:off + c] = inds[pick]
         b2t_b[off // block_p:(off + cp) // block_p] = ti
         off += cp
     return rows_b, vals_b, inds_b, b2t_b
+
+
+def block_segment_descriptors(local_rows: np.ndarray, *, tile: int,
+                              block_p: int):
+    """Per-block row-segment descriptors for the ``sorted`` EC kernel.
+
+    ``local_rows`` is any ``(..., nblocks * block_p)`` local-row array
+    following the block layout contract (each block maps to one output
+    tile). Runs of equal row-in-tile become segments: returns
+    ``(seg_starts, seg_rows)`` with shapes ``(..., nblocks, S + 1)`` and
+    ``(..., nblocks, S)`` where ``S = tile + 1`` (a block holds at most
+    ``tile`` distinct rows plus one pad run that may break monotonicity
+    under the legacy blocked layout). ``seg_starts[..., b, s]`` is the
+    in-block start of segment ``s``; segment ``s`` spans
+    ``[seg_starts[s], seg_starts[s + 1])`` and unused slots hold
+    ``block_p`` so trailing segments are empty. ``seg_rows`` holds each
+    segment's row within the tile (unused slots 0).
+
+    Derived on demand from ``local_rows`` — descriptors are never
+    serialized into plans or window spills.
+    """
+    lr = np.asarray(local_rows)
+    lead = lr.shape[:-1]
+    if lr.shape[-1] % block_p:
+        raise ValueError(
+            f"local_rows last dim {lr.shape[-1]} is not a multiple of "
+            f"block_p={block_p}")
+    nblocks = lr.shape[-1] // block_p
+    S = tile + 1
+    rit = (lr.reshape(-1, block_p) % tile).astype(np.int32)
+    nb = rit.shape[0]
+    newseg = np.ones_like(rit, dtype=bool)
+    newseg[:, 1:] = rit[:, 1:] != rit[:, :-1]
+    nseg = newseg.sum(axis=1)
+    if int(nseg.max(initial=0)) > S:
+        raise ValueError(
+            f"block layout violation: a block holds {int(nseg.max())} row "
+            f"segments, more than tile + 1 = {S}; rows within a block must "
+            f"be tile-local (see block_device_rows)")
+    seg_id = np.cumsum(newseg, axis=1) - 1
+    seg_starts = np.full((nb, S + 1), block_p, np.int32)
+    seg_rows = np.zeros((nb, S), np.int32)
+    b, p = np.nonzero(newseg)
+    seg_starts[b, seg_id[b, p]] = p
+    seg_rows[b, seg_id[b, p]] = rit[b, p]
+    return (seg_starts.reshape(*lead, nblocks, S + 1),
+            seg_rows.reshape(*lead, nblocks, S))
 
 
 def _layout_rows(owner: np.ndarray, n_groups: int, rows_max: int):
@@ -321,6 +400,7 @@ def partition_mode(
     replication: int | None = None,
     tile: int | None = None,
     block_p: int | None = None,
+    layout: Layout = DEFAULT_LAYOUT,
     all_g2p: Sequence[np.ndarray] | None = None,
 ) -> tuple[ModePartition, np.ndarray, np.ndarray]:
     """Partition one per-mode tensor copy.
@@ -333,7 +413,8 @@ def partition_mode(
     """
     hist = t.mode_histogram(mode)
     lay = mode_layout(hist, mode, num_devices, strategy=strategy,
-                      replication=replication, tile=tile, block_p=block_p)
+                      replication=replication, tile=tile, block_p=block_p,
+                      layout=layout)
     m, r, n_groups = lay.num_devices, lay.r, lay.n_groups
     tile, block_p, rows_max = lay.tile, lay.block_p, lay.rows_max
     owner, g2p, p2g, rows_owned = (lay.owner, lay.global_to_padded,
@@ -373,7 +454,7 @@ def partition_mode(
         lrow = (nz_padded_row[sel] - g * rows_max).astype(np.int64)
         rows_b, vals_b, inds_b, b2t_b = block_device_rows(
             lrow, val_sorted[sel], ind_sorted[sel],
-            n_tiles=n_tiles, tile=tile, block_p=block_p)
+            n_tiles=n_tiles, tile=tile, block_p=block_p, layout=layout)
         dev_rows.append(rows_b)
         dev_vals.append(vals_b)
         dev_inds.append(inds_b)
@@ -396,9 +477,13 @@ def partition_mode(
         b2t_arr[dev, :kb] = dev_b2t[dev]
         # trailing pad blocks revisit the last used tile (no extra switches)
         b2t_arr[dev, kb:] = dev_b2t[dev][-1] if kb else 0
-        # pad rows must be in the pad blocks' tile
-        pad_tile = int(b2t_arr[dev, -1])
-        rows_arr[dev, k:] = pad_tile * tile
+        # pad rows must be in the pad blocks' tile; the sorted layout keeps
+        # them at the device's last real row so local_rows stays monotone
+        if layout == "sorted":
+            rows_arr[dev, k:] = dev_rows[dev][-1] if k else 0
+        else:
+            pad_tile = int(b2t_arr[dev, -1])
+            rows_arr[dev, k:] = pad_tile * tile
         visited[dev, b2t_arr[dev]] = 1.0
 
     # translate input-mode indices into padded layouts
@@ -433,6 +518,7 @@ def partition_mode(
         nnz_true=nnz_true,
         rows_owned=rows_owned,
         blocks_true=np.array([x.size for x in dev_b2t], np.int64),
+        block_layout=layout,
     )
     return part, g2p, p2g
 
@@ -470,6 +556,7 @@ def build_plan(
     replication: int | None = None,
     tile: int | None = None,
     block_p: int | None = None,
+    layout: Layout = DEFAULT_LAYOUT,
 ) -> CPPlan:
     """Full preprocessing (paper §3 + §5.7): every mode's copy, partitioned,
     row-relabelled, kernel-blocked and padded. Pure host/numpy.
@@ -488,7 +575,7 @@ def build_plan(
     for d in range(n):
         _, g2p, p2g = partition_mode(
             t, d, num_devices, strategy=strategy, replication=replication,
-            tile=tile, block_p=block_p, all_g2p=None)
+            tile=tile, block_p=block_p, layout=layout, all_g2p=None)
         g2ps.append(g2p)
         metas.append(p2g)
     # pass 2: build device arrays with translated indices
@@ -496,7 +583,7 @@ def build_plan(
     for d in range(n):
         part, _, _ = partition_mode(
             t, d, num_devices, strategy=strategy, replication=replication,
-            tile=tile, block_p=block_p, all_g2p=g2ps)
+            tile=tile, block_p=block_p, layout=layout, all_g2p=g2ps)
         parts.append(part)
     return validate_plan(CPPlan(
         shape=t.shape,

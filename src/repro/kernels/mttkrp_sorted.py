@@ -1,0 +1,200 @@
+"""Third-generation EC kernel: row-sorted segments, no one-hot scatter.
+
+``ec_fused`` (mttkrp_fused.py) removed the ``(nnz, R)`` gathered
+intermediate but still commits every block's partial output through a
+``tile × block_p`` one-hot matmul — ``2·block_p·tile·R`` FLOPs per block of
+pure scatter overhead that also rewrites the whole output tile once per
+block. ``ec_sorted`` removes that too, following the segmented-reduction
+design of Nisa et al. (arXiv 1904.03329) and the FLYCOO per-mode sorted
+copy (arXiv 2405.08470):
+
+  * the device shard is row-sorted (``layout="sorted"`` in
+    core/partition.py): each block's ``local_rows`` decompose into at most
+    ``tile + 1`` runs of equal output row, described by scalar-prefetched
+    per-block segment descriptors (``seg_starts``/``seg_rows``, see
+    ``core.partition.block_segment_descriptors``),
+  * factor rows stream exactly as in ``ec_fused`` — HBM-resident factors
+    (``pltpu.ANY``), lookahead index views, a rotating ring of
+    ``num_buffers`` VMEM slots filled by async row DMAs, one aggregated
+    semaphore wait per slot,
+  * each segment accumulates in a ``(1, R)`` register/VMEM accumulator and
+    read-modify-writes its output row once — the row's current partial is
+    loaded, the segment's elementwise products are added in slot order, and
+    the row is stored back. No one-hot matmul, no per-block tile rewrite,
+    and the ``row_in_tile`` array is never shipped to the kernel at all.
+
+Accumulation order is *slot order*, exactly the order XLA's scatter-add
+(`segment_sum`) uses, so the result is bit-identical to ``ref`` — on both
+layouts (on the legacy blocked layout a pad run may revisit an earlier row,
+but pads contribute exact ``0.0`` adds in the same slot positions).
+
+Kernel contract (core/partition.py): fixed-size ``block_p`` blocks, every
+block updates rows inside one output tile, blocks of a tile consecutive,
+padding entries have ``values == 0`` and in-bounds index/row entries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ec_sorted"]
+
+MAX_NUM_BUFFERS = 4
+
+
+def _sorted_kernel(nin: int, num_buffers: int, nblocks: int, nseg: int,
+                   b2t, seg_starts, seg_rows, *refs):
+    """refs layout (after the scalar-prefetched descriptors):
+
+      vals_ref,
+      idx_ref_0 .. idx_ref_{L},      L+1 views of the index array; idx_ref_k
+                                     holds block min(i+k, nblocks-1)'s slice
+      fac_ref_0 .. fac_ref_{nin-1},  full factor matrices, HBM-resident
+      out_ref,
+      idx_smem, row_buf, row_sems, stage_sem
+    """
+    lookahead = num_buffers - 1
+    vals_ref = refs[0]
+    idx_refs = refs[1:1 + lookahead + 1]
+    fac_refs = refs[1 + lookahead + 1:1 + lookahead + 1 + nin]
+    out_ref = refs[1 + lookahead + 1 + nin]
+    idx_smem, row_buf, row_sems, stage_sem = refs[-4:]
+
+    i = pl.program_id(0)
+    block_p = vals_ref.shape[0]
+
+    def start_rows(idx_ref, slot):
+        """Stage idx_ref (VMEM) into SMEM, then launch one row DMA per
+        (nonzero, input mode) into ``row_buf[slot]``."""
+        stage = pltpu.make_async_copy(idx_ref, idx_smem, stage_sem)
+        stage.start()
+        stage.wait()
+
+        def body(p, _):
+            for w in range(nin):
+                pltpu.make_async_copy(
+                    fac_refs[w].at[idx_smem[p, w]],
+                    row_buf.at[slot, w, p],
+                    row_sems.at[slot],
+                ).start()
+            return 0
+
+        jax.lax.fori_loop(0, block_p, body, 0)
+
+    @pl.when(i == 0)
+    def _prologue():
+        for k in range(lookahead):
+            if k < nblocks:
+                start_rows(idx_refs[k], k % num_buffers)
+
+    @pl.when(i + lookahead < nblocks)
+    def _prefetch():
+        start_rows(idx_refs[lookahead],
+                   jax.lax.rem(i + lookahead, num_buffers))
+
+    slot = jax.lax.rem(i, num_buffers)
+    pltpu.make_async_copy(row_buf.at[slot], row_buf.at[slot],
+                          row_sems.at[slot]).wait()
+
+    prev = b2t[jnp.maximum(i - 1, 0)]
+
+    @pl.when(jnp.logical_or(i == 0, prev != b2t[i]))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    e = vals_ref[...].astype(jnp.float32)[:, None]
+    for w in range(nin):
+        e = e * row_buf[slot, w]
+
+    # Segmented reduction: each run of equal output row accumulates in a
+    # (1, R) accumulator, added in slot order (== segment_sum's order), and
+    # its row is read-modify-written exactly once per segment.
+    for s in range(nseg):
+        start = seg_starts[i, s]
+        end = seg_starts[i, s + 1]
+        row = seg_rows[i, s]
+
+        @pl.when(end > start)
+        def _segment(start=start, end=end, row=row):
+            acc = out_ref[pl.ds(row, 1), :]
+
+            def body(p, acc):
+                return acc + jax.lax.dynamic_slice_in_dim(e, p, 1, axis=0)
+
+            out_ref[pl.ds(row, 1), :] = jax.lax.fori_loop(
+                start, end, body, acc)
+
+
+def ec_sorted(
+    values: jax.Array,                 # (nnz,)  nnz = nblocks * block_p
+    seg_starts: jax.Array,             # (nblocks, S+1) int32, S = tile+1
+    seg_rows: jax.Array,               # (nblocks, S) int32 in [0, tile)
+    block_to_tile: jax.Array,          # (nblocks,) int32, scalar-prefetched
+    input_indices: jax.Array,          # (nnz, nin) int32 rows into factors[w]
+    factors: Sequence[jax.Array],      # nin arrays (padded_w, R), HBM-resident
+    *,
+    num_rows: int,                     # rows_max (multiple of tile)
+    tile: int,
+    block_p: int,
+    num_buffers: int = 2,
+    interpret: bool = False,
+) -> jax.Array:
+    """Segmented-reduction EC on the row-sorted block layout.
+
+    Returns (num_rows, R) f32, bit-identical to the ``ref`` oracle.
+    ``input_indices[:, j]`` indexes ``factors[j]`` (the output mode is
+    compacted away by the caller, see ops.py); descriptors come from
+    ``core.partition.block_segment_descriptors``.
+    """
+    nnz = values.shape[0]
+    assert nnz % block_p == 0, (nnz, block_p)
+    assert num_rows % tile == 0, (num_rows, tile)
+    if not (2 <= num_buffers <= MAX_NUM_BUFFERS):
+        raise ValueError(
+            f"num_buffers must be in [2, {MAX_NUM_BUFFERS}], got {num_buffers}")
+    nblocks = nnz // block_p
+    nin = len(factors)
+    assert input_indices.shape == (nnz, nin), (input_indices.shape, nnz, nin)
+    nseg = seg_rows.shape[-1]
+    assert seg_starts.shape == (nblocks, nseg + 1), (seg_starts.shape, nseg)
+    assert seg_rows.shape == (nblocks, nseg), (seg_rows.shape, nblocks)
+    r = factors[0].shape[-1]
+    lookahead = num_buffers - 1
+
+    def idx_map(k):
+        return lambda i, b2t, ss, sr: (jnp.minimum(i + k, nblocks - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block_p,), lambda i, b2t, ss, sr: (i,)),
+        ] + [
+            pl.BlockSpec((block_p, nin), idx_map(k))
+            for k in range(lookahead + 1)
+        ] + [
+            pl.BlockSpec(memory_space=pltpu.ANY) for _ in range(nin)
+        ],
+        out_specs=pl.BlockSpec((tile, r), lambda i, b2t, ss, sr: (b2t[i], 0)),
+        scratch_shapes=[
+            pltpu.SMEM((block_p, nin), jnp.int32),
+            pltpu.VMEM((num_buffers, nin, block_p, r), jnp.float32),
+            pltpu.SemaphoreType.DMA((num_buffers,)),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    facs32 = [f.astype(jnp.float32) for f in factors]
+    return pl.pallas_call(
+        functools.partial(_sorted_kernel, nin, num_buffers, nblocks, nseg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_rows, r), jnp.float32),
+        interpret=interpret,
+        name=f"amped_ec_sorted_nin{nin}_nb{num_buffers}",
+    )(block_to_tile, seg_starts.astype(jnp.int32),
+      seg_rows.astype(jnp.int32), values,
+      *([input_indices] * (lookahead + 1)), *facs32)

@@ -1,13 +1,18 @@
 """Kernel-variant dispatch for the MTTKRP EC.
 
 ``mttkrp_local`` is the single-device EC used inside shard_map by
-core/mttkrp.py. Three interchangeable variants (see EXPERIMENTS.md §Perf):
+core/mttkrp.py. Four interchangeable variants (see EXPERIMENTS.md §Perf):
 
   ``ref``      pure-jnp gather + segment_sum (XLA; the semantic oracle)
   ``blocked``  XLA pre-gather of (nnz, R) input rows + Pallas one-hot-matmul
                EC kernel (mttkrp_pallas.ec_blocked)
   ``fused``    in-kernel factor gather with double-buffered HBM streaming —
                no gathered intermediate (mttkrp_fused.ec_fused)
+  ``sorted``   fused's in-kernel gather + segmented reduction over the
+               row-sorted block layout — no one-hot scatter, each output
+               row written once per segment; bit-identical to ``ref``
+               (mttkrp_sorted.ec_sorted; needs seg_starts/seg_rows
+               descriptors, see core.partition.block_segment_descriptors)
 
 Selection precedence: explicit ``variant=`` argument > ``AMPED_EC_VARIANT``
 environment variable > default (``blocked``). ``use_kernel=False`` keeps its
@@ -25,6 +30,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.mttkrp_fused import ec_fused
 from repro.kernels.mttkrp_pallas import ec_blocked
+from repro.kernels.mttkrp_sorted import ec_sorted
 
 __all__ = ["mttkrp_local", "default_interpret", "resolve_variant",
            "kernel_kwargs_from_config", "KERNEL_VARIANTS", "ENV_VARIANT",
@@ -89,16 +95,17 @@ def _mask_unvisited(out: jax.Array, tile_mask: jax.Array | None,
 
 def _run_ref(indices, values, local_rows, block_to_tile, factors, *,
              mode, num_rows, tile, block_p, interpret, tile_mask,
-             num_buffers):
+             num_buffers, seg_starts, seg_rows, rows_sorted):
     del block_to_tile, tile, block_p, interpret, tile_mask, num_buffers
+    del seg_starts, seg_rows
     return _ref.mttkrp_local_ref(indices, values, local_rows, factors,
-                                 mode, num_rows)
+                                 mode, num_rows, sorted_rows=rows_sorted)
 
 
 def _run_blocked(indices, values, local_rows, block_to_tile, factors, *,
                  mode, num_rows, tile, block_p, interpret, tile_mask,
-                 num_buffers):
-    del num_buffers
+                 num_buffers, seg_starts, seg_rows, rows_sorted):
+    del num_buffers, seg_starts, seg_rows, rows_sorted
     gathered = [factors[w][indices[:, w]]
                 for w in range(len(factors)) if w != mode]
     row_in_tile = (local_rows % tile).astype(jnp.int32)
@@ -110,7 +117,8 @@ def _run_blocked(indices, values, local_rows, block_to_tile, factors, *,
 
 def _run_fused(indices, values, local_rows, block_to_tile, factors, *,
                mode, num_rows, tile, block_p, interpret, tile_mask,
-               num_buffers):
+               num_buffers, seg_starts, seg_rows, rows_sorted):
+    del seg_starts, seg_rows, rows_sorted
     # Compact the input-mode index columns into one (nnz, nin) array; the
     # factor matrices themselves stay in HBM (no (nnz, R) intermediate).
     in_modes = [w for w in range(len(factors)) if w != mode]
@@ -124,10 +132,30 @@ def _run_fused(indices, values, local_rows, block_to_tile, factors, *,
     return _mask_unvisited(out, tile_mask, tile)
 
 
+def _run_sorted(indices, values, local_rows, block_to_tile, factors, *,
+                mode, num_rows, tile, block_p, interpret, tile_mask,
+                num_buffers, seg_starts, seg_rows, rows_sorted):
+    del local_rows, rows_sorted  # descriptors replace the per-slot rows
+    if seg_starts is None or seg_rows is None:
+        raise ValueError(
+            "variant='sorted' needs per-block segment descriptors; compute "
+            "them with core.partition.block_segment_descriptors(local_rows, "
+            "tile=..., block_p=...) and pass seg_starts=/seg_rows=")
+    in_modes = [w for w in range(len(factors)) if w != mode]
+    input_indices = jnp.stack([indices[:, w] for w in in_modes], axis=1)
+    out = ec_sorted(
+        values, seg_starts, seg_rows, block_to_tile, input_indices,
+        [factors[w] for w in in_modes],
+        num_rows=num_rows, tile=tile, block_p=block_p,
+        num_buffers=num_buffers, interpret=interpret)
+    return _mask_unvisited(out, tile_mask, tile)
+
+
 KERNEL_VARIANTS = {
     "ref": _run_ref,
     "blocked": _run_blocked,
     "fused": _run_fused,
+    "sorted": _run_sorted,
 }
 
 
@@ -147,6 +175,9 @@ def mttkrp_local(
     num_buffers: int = 2,
     interpret: bool | None = None,
     tile_mask: jax.Array | None = None,  # (num_rows/tile,) 1=visited
+    seg_starts: jax.Array | None = None,  # (nblocks, S+1) int32 ("sorted")
+    seg_rows: jax.Array | None = None,    # (nblocks, S) int32 ("sorted")
+    rows_sorted: bool = False,            # local_rows nondecreasing (ref hint)
 ) -> jax.Array:
     """Local (per-device) EC over this device's shard. Returns (num_rows, R) f32."""
     variant = resolve_variant(variant, use_kernel)
@@ -155,4 +186,5 @@ def mttkrp_local(
     return KERNEL_VARIANTS[variant](
         indices, values, local_rows, block_to_tile, factors,
         mode=mode, num_rows=num_rows, tile=tile, block_p=block_p,
-        interpret=interpret, tile_mask=tile_mask, num_buffers=num_buffers)
+        interpret=interpret, tile_mask=tile_mask, num_buffers=num_buffers,
+        seg_starts=seg_starts, seg_rows=seg_rows, rows_sorted=rows_sorted)

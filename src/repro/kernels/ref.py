@@ -14,25 +14,34 @@ import jax.numpy as jnp
 __all__ = ["ec_rows_ref", "mttkrp_local_ref", "mttkrp_dense_ref"]
 
 
-def ec_rows_ref(values, gathered_rows: Sequence[jax.Array], local_rows, num_rows: int):
+def ec_rows_ref(values, gathered_rows: Sequence[jax.Array], local_rows,
+                num_rows: int, sorted_rows: bool = False):
     """EC from already-gathered input rows.
 
     values: (nnz,); gathered_rows: list of (nnz, R); local_rows: (nnz,) int32.
     Returns (num_rows, R) f32 accumulation (padding entries have value 0 →
-    exact no-ops).
+    exact no-ops). ``sorted_rows=True`` asserts ``local_rows`` is
+    nondecreasing (the row-sorted block layout) so XLA can lower the
+    scatter-add as a segmented reduction; rows may repeat, so
+    ``unique_indices`` stays False. The hint never changes the result —
+    XLA's scatter-add accumulates in slot order either way (bit-identity
+    asserted in tests) — it only removes the unsorted-scatter bookkeeping.
     """
     e = values.astype(jnp.float32)[:, None]
     for rows in gathered_rows:
         e = e * rows.astype(jnp.float32)
-    return jax.ops.segment_sum(e, local_rows, num_segments=num_rows)
+    return jax.ops.segment_sum(e, local_rows, num_segments=num_rows,
+                               indices_are_sorted=sorted_rows,
+                               unique_indices=False)
 
 
 def mttkrp_local_ref(indices, values, local_rows, factors: Sequence[jax.Array],
-                     mode: int, num_rows: int):
+                     mode: int, num_rows: int, sorted_rows: bool = False):
     """Gather + EC oracle. ``indices``: (nnz, N) in padded layouts;
     ``factors[w]``: (padded_w, R)."""
     gathered = [factors[w][indices[:, w]] for w in range(len(factors)) if w != mode]
-    return ec_rows_ref(values, gathered, local_rows, num_rows)
+    return ec_rows_ref(values, gathered, local_rows, num_rows,
+                       sorted_rows=sorted_rows)
 
 
 def mttkrp_dense_ref(dense, factors: Sequence[jax.Array], mode: int):

@@ -34,9 +34,11 @@ import time
 
 
 def main():
+    from repro.api.config import PRESETS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="paper",
-                    choices=["paper", "optimized", "fused"],
+                    choices=sorted(PRESETS),
                     help="named repro.api configuration preset")
     ap.add_argument("--set", dest="set_args", action="append", default=[],
                     metavar="KEY=VALUE",

@@ -193,6 +193,8 @@ def run_cp_cell(*, multi_pod: bool, profile: str = "amazon",
         local_rows=st((g, r, nnz_dev), jnp.int32),
         block_to_tile=st((g, r, nnz_dev // block_p), jnp.int32),
         tile_visited=st((g, r, rows_max // tile), jnp.float32),
+        seg_starts=st((g, r, nnz_dev // block_p, tile + 2), jnp.int32),
+        seg_rows=st((g, r, nnz_dev // block_p, tile + 1), jnp.int32),
     )
     factors = [st((padded[w], rank), jnp.float32) for w in range(n)]
     fn = dm.make_mttkrp_fn(part, mesh, exchange_spec=spec, **kernel_kw)
@@ -204,6 +206,8 @@ def run_cp_cell(*, multi_pod: bool, profile: str = "amazon",
         local_rows=sh("group", "sub", None),
         block_to_tile=sh("group", "sub", None),
         tile_visited=sh("group", "sub", None),
+        seg_starts=sh("group", "sub", None, None),
+        seg_rows=sh("group", "sub", None, None),
     )
     f_in = [sh(None, None) for _ in range(n)]
 

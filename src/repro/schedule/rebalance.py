@@ -246,7 +246,8 @@ def _reblock_member(lrow, vals, inds, part):
     from repro.core.partition import block_device_rows
     return block_device_rows(lrow, vals, inds,
                              n_tiles=part.rows_max // part.tile,
-                             tile=part.tile, block_p=part.block_p)
+                             tile=part.tile, block_p=part.block_p,
+                             layout=getattr(part, "block_layout", "blocked"))
 
 
 def apply_rebalance(plan, decision: ReplanDecision):
@@ -336,9 +337,12 @@ def apply_rebalance(plan, decision: ReplanDecision):
                 inds[dev][:k] = inds_b
                 b2t[dev][:kb] = b2t_b
                 b2t[dev][kb:] = b2t_b[-1] if kb else 0
-                pad_tile = int(b2t[dev][-1])
                 rows[dev][:k] = rows_b
-                rows[dev][k:] = pad_tile * part.tile
+                if getattr(part, "block_layout", "blocked") == "sorted":
+                    rows[dev][k:] = rows_b[-1] if k else 0
+                else:
+                    pad_tile = int(b2t[dev][-1])
+                    rows[dev][k:] = pad_tile * part.tile
                 visited[dev][:] = 0
                 visited[dev][b2t[dev]] = 1.0
                 nnz_true[dev] = int(target[s])

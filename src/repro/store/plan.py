@@ -81,6 +81,7 @@ class StoreModePartition:
                  all_g2p: list[np.ndarray]):
         self.store = store
         self.layout = layout
+        self.block_layout = layout.block_layout
         self.all_g2p = [np.asarray(g, np.int64) for g in all_g2p]
         self.mode = layout.mode
         self.num_devices = layout.num_devices
@@ -292,15 +293,33 @@ class StoreModePartition:
         # function's peak (the bound the out-of-core path exists to keep)
         values = np.zeros(nnz_cap, np.float32)
         indices = np.zeros((nnz_cap, nmodes), np.int32)
-        # local_rows analytically: real slots get their row, in-tile pad
-        # slots the tile's first row, trailing slots the last used tile's
-        local_rows = np.full(nnz_cap, int(b2t[-1]) * tile if nblocks else 0,
-                             np.int32)
+        # local_rows analytically. Pad-row placement mirrors partition_mode:
+        #   blocked — in-tile pads point at the tile's FIRST row, trailing
+        #             slots at the last used tile's first row;
+        #   sorted  — pads point at the LAST REAL row already emitted (the
+        #             tile's last occupied row; trailing slots the last used
+        #             tile's), keeping local_rows nondecreasing.
         pad_per_tile = (tc_pad - tc).astype(np.int32)
         pad_pos = (np.repeat(tile_off + tc.astype(np.int32), pad_per_tile)
                    + _ragged_arange(pad_per_tile))
-        local_rows[pad_pos] = np.repeat(
-            np.arange(t0, t1, dtype=np.int32) * tile, pad_per_tile)
+        if self.block_layout == "sorted" and kb:
+            cnt2d = cnt32.reshape(w_tiles, tile)
+            # per-window-tile last occupied row-in-tile (-1 for empty tiles;
+            # never indexed there: pad_per_tile > 0 implies tc > 0)
+            last_rit = np.where(
+                cnt2d > 0, np.arange(tile, dtype=np.int32)[None, :],
+                np.int32(-1)).max(axis=1).astype(np.int32)
+            lt = int(b2t[-1])  # last used tile (absolute id)
+            local_rows = np.full(
+                nnz_cap, lt * tile + int(last_rit[lt - t0]), np.int32)
+            local_rows[pad_pos] = np.repeat(
+                np.arange(t0, t1, dtype=np.int32) * tile + last_rit,
+                pad_per_tile)
+        else:
+            local_rows = np.full(
+                nnz_cap, int(b2t[-1]) * tile if nblocks else 0, np.int32)
+            local_rows[pad_pos] = np.repeat(
+                np.arange(t0, t1, dtype=np.int32) * tile, pad_per_tile)
         real_rows = np.repeat(np.arange(r_lo, r_hi, dtype=np.int32), cnt32)
         real_pos = np.repeat(row_slot_start, cnt32) + _ragged_arange(cnt32)
         local_rows[real_pos] = real_rows
@@ -382,7 +401,8 @@ class StoreModePartition:
             indices=inds, values=vals, local_rows=rows,
             block_to_tile=self.block_to_tile,
             tile_visited=self.tile_visited, nnz_true=self.nnz_true,
-            rows_owned=self.rows_owned, blocks_true=self.blocks_true)
+            rows_owned=self.rows_owned, blocks_true=self.blocks_true,
+            block_layout=self.block_layout)
 
 
 def _ragged_arange(counts: np.ndarray) -> np.ndarray:
@@ -562,6 +582,7 @@ def build_plan_from_store(
     replication: int | None = None,
     tile: int | None = None,
     block_p: int | None = None,
+    layout: partition_mod.Layout = partition_mod.DEFAULT_LAYOUT,
 ) -> CPPlan:
     """Full preprocessing of an out-of-core tensor from manifest stats.
 
@@ -577,7 +598,7 @@ def build_plan_from_store(
                           for d in range(n))
     layouts = [partition_mod.mode_layout(
         hists[d], d, num_devices, strategy=strategy,
-        replication=replication, tile=tile, block_p=block_p)
+        replication=replication, tile=tile, block_p=block_p, layout=layout)
         for d in range(n)]
     for lay in layouts:
         # The device-side layout (ModePartition.indices, the exchange's row

@@ -272,8 +272,8 @@ def test_autotune_cache_key_dtype_and_rank(tmp_path, monkeypatch):
     """Regression: the v1 cache keyed only (nmodes, rank, backend, variant),
     so an fp32 and a bf16 sweep — and, in a key missing rank, different R —
     collided on one entry and replayed each other's tile/block_p winners.
-    The v2 key carries both; distinct (dtype, rank) points must produce
-    distinct cache entries."""
+    The v3 key carries dtype, rank AND the device kind; distinct
+    (dtype, rank) points must produce distinct cache entries."""
     import json
 
     import jax.numpy as jnp
@@ -293,16 +293,18 @@ def test_autotune_cache_key_dtype_and_rank(tmp_path, monkeypatch):
     assert cache["_format"] == at.CACHE_FORMAT_VERSION
     assert len(entries) == 3, entries  # no collisions
     backend = __import__("jax").default_backend()
-    assert f"3m_r8_float32_{backend}_ref" in entries
-    assert f"3m_r8_bfloat16_{backend}_ref" in entries
-    assert f"3m_r16_float32_{backend}_ref" in entries
+    kind = at.device_kind_tag()
+    assert f"3m_r8_float32_{backend}_{kind}_ref" in entries
+    assert f"3m_r8_bfloat16_{backend}_{kind}_ref" in entries
+    assert f"3m_r16_float32_{backend}_{kind}_ref" in entries
 
 
 def test_autotune_cache_v1_migration(tmp_path, monkeypatch):
-    """Loading a v1 cache re-keys its (fp32-timed) entries to the dtype-
-    qualified v2 form, drops unrecognizable keys, and persists the migrated
-    file; a bf16 request then MISSES the migrated fp32 entry (the collision
-    the bugfix removes) while an fp32 request with the same grid hits it."""
+    """Loading a v1 cache chain-migrates its (fp32-timed) entries through
+    the dtype-qualified v2 form to the kind-qualified v3 form, drops
+    unrecognizable keys, and persists the migrated file; a bf16 request
+    then MISSES the migrated fp32 entry (the collision the bugfix removes)
+    while an fp32 request with the same grid hits it."""
     import json
 
     import jax
@@ -325,7 +327,9 @@ def test_autotune_cache_v1_migration(tmp_path, monkeypatch):
     at._MEMO.clear()
     loaded = at._load_cache(str(path))
     assert loaded["_format"] == at.CACHE_FORMAT_VERSION
-    assert f"3m_r8_float32_{backend}_ref" in loaded
+    # v1 key gains a float32 dtype slot AND a device-kind slot (stand-in:
+    # the key's backend segment — exact on CPU)
+    assert f"3m_r8_float32_{backend}_{backend}_ref" in loaded
     assert "garbage key" not in loaded
     on_disk = json.loads(path.read_text())  # migration persisted
     assert on_disk.get("_format") == at.CACHE_FORMAT_VERSION
