@@ -661,8 +661,8 @@ def modelled_hbm_bytes(variant: str, nnz: int, rank: int, nin: int,
 
 
 def _gather_free(run, args) -> bool:
-    txt = jax.jit(run).lower(*args).as_text()
-    return "gather" not in txt
+    from repro.analysis.hlo_audit import gather_free
+    return gather_free(jax.jit(run).lower(*args).as_text())
 
 
 def bench_point(nmodes: int, rank: int, nnz: int, *, repeats: int = 3,
@@ -895,9 +895,27 @@ def main() -> None:
               f"refresh fit delta {serve['refresh_fit_delta']:.2e} "
               f"(snapshot v{serve['snapshot_version']})")
 
+    # static-analysis gate: concurrency lint + configs allowlist + autotune
+    # cache hygiene + plan rules on one small sorted plan; the artifact
+    # records the count and check_trajectory fails any nonzero value
+    import repro.api as rapi
+    from repro.analysis import (check_autotune_cache, check_config_modules,
+                                check_plan, lint_default_targets)
+    from repro.sparse.io import make_profile_tensor
+    acfg = rapi.preset("sorted", {"rank": 8})
+    afindings = (lint_default_targets() + check_config_modules()
+                 + check_autotune_cache()
+                 + check_plan(rapi.plan(
+                     make_profile_tensor("amazon", scale=2e-5, seed=0),
+                     acfg), acfg, deep=True))
+    for f in afindings:
+        print(f"analysis: {f}")
+    print(f"analysis findings: {len(afindings)}")
+
     save_result("BENCH_mttkrp", {
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
+        "analysis_findings": len(afindings),
         "notes": ("interpret-mode times are not hardware-meaningful; "
                   "modelled_hbm_bytes + modelled_flops + gather_free + the "
                   "ref_sorted_hint segment_sum wall times + the "

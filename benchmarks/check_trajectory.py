@@ -50,6 +50,14 @@ def compare(old: dict, new: dict, tol: float) -> tuple[int, list[str]]:
     checked = 0
     failures: list[str] = []
 
+    # static-analysis gate on the new artifact alone: the repro.analysis
+    # sweep baked into the bench must stay at zero findings
+    if new.get("analysis_findings") is not None:
+        checked += 1
+        if new["analysis_findings"] != 0:
+            failures.append(f"analysis_findings = "
+                            f"{new['analysis_findings']} (must be 0)")
+
     old_pts = {(p["nmodes"], p["rank"], p["nnz"]): p
                for p in old.get("points") or []}
     for p in new.get("points") or []:

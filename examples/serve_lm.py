@@ -10,8 +10,8 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.models.lm_serve import generate
 from repro.models.transformer import Model
-from repro.serving.serve import generate
 
 
 def main():

@@ -1,0 +1,42 @@
+"""Static analysis for the AMPED reproduction: three passes, one CLI.
+
+- :mod:`repro.analysis.plan_rules` — ``AP-*`` plan/config invariants, run
+  before compile (``api.plan(..., analyze="strict"|"warn"|"off")``).
+- :mod:`repro.analysis.hlo_audit` — ``AH-*`` checks over lowered/compiled
+  HLO text of the jitted sweep and serving kernels
+  (``CPSolver.audit()``).
+- :mod:`repro.analysis.concurrency` — ``AC-*`` AST lint of the
+  ``# guarded-by:`` / ``# holds:`` lock annotations in the thread-using
+  runtime modules, with an opt-in runtime assertion mode
+  (``AMPED_ANALYSIS_ASSERT_LOCKS=1``, :mod:`repro.analysis.runtime`).
+
+CLI: ``python -m repro.analysis --preset sorted`` (exit 0 clean, 1 on
+findings, 2 on usage errors); see ``--help`` for the streaming/serving
+scenarios and ``--baseline`` support.
+"""
+from repro.analysis.concurrency import (DEFAULT_TARGETS,
+                                        lint_default_targets, lint_file,
+                                        lint_source)
+from repro.analysis.hlo_audit import (audit_ec_kernel, audit_serving_engine,
+                                      audit_solver, donation_aliased,
+                                      gather_free, serving_retrace_report)
+from repro.analysis.model import (AnalysisError, Finding, apply_baseline,
+                                  errors, format_findings, load_baseline,
+                                  save_baseline)
+from repro.analysis.plan_rules import (DEFAULT_VMEM_BUDGET, PLAN_RULES,
+                                       check_autotune_cache, check_plan,
+                                       check_config_modules)
+from repro.analysis.runtime import (ENV_ASSERT, LockNotHeldError,
+                                    assert_holds, lock_assertions_enabled)
+
+__all__ = [
+    "AnalysisError", "Finding", "errors", "format_findings",
+    "apply_baseline", "load_baseline", "save_baseline",
+    "PLAN_RULES", "DEFAULT_VMEM_BUDGET", "check_plan",
+    "check_autotune_cache", "check_config_modules",
+    "audit_solver", "audit_ec_kernel", "audit_serving_engine",
+    "serving_retrace_report", "gather_free", "donation_aliased",
+    "DEFAULT_TARGETS", "lint_file", "lint_source", "lint_default_targets",
+    "ENV_ASSERT", "LockNotHeldError", "assert_holds",
+    "lock_assertions_enabled",
+]

@@ -16,6 +16,7 @@ Everything else (``save_plan``/``load_plan``, ``solver.sweep()``,
 these three calls. The legacy ``repro.core.decompose.cp_decompose`` is a
 deprecated shim over exactly this pipeline.
 """
+from repro.analysis.model import AnalysisError, Finding
 from repro.api.config import (DecomposeConfig, ExchangeConfig, KernelConfig,
                               PartitionConfig, PRESETS, RuntimeConfig,
                               ScheduleConfig, apply_set_args, fused,
@@ -33,6 +34,8 @@ __all__ = [
     # plan layer
     "plan", "plan_signature", "save_plan", "load_plan", "PlanSignatureError",
     "CACHE_STATS", "reset_cache_stats",
+    # analysis layer (plan(..., analyze=) / CPSolver.audit findings)
+    "AnalysisError", "Finding",
     # execute layer
     "compile", "CPSolver",
 ]

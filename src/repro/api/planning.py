@@ -22,6 +22,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import sys
 
 import jax
 import numpy as np
@@ -263,9 +264,29 @@ def _rebind_lazy_modes(path: str, manifest: dict, g2ps, p2gs):
 
 # -- the public entry ---------------------------------------------------------
 
+def _analyze_plan(p: CPPlan, config: DecomposeConfig, analyze: str) -> CPPlan:
+    """Run the static plan rules on a built or cache-loaded plan.
+    ``"strict"`` raises :class:`~repro.analysis.AnalysisError` on error
+    findings; ``"warn"`` prints every finding to stderr; ``"off"`` skips
+    the pass entirely (zero import cost)."""
+    if analyze == "off":
+        return p
+    if analyze not in ("warn", "strict"):
+        raise ValueError(f"analyze must be 'off', 'warn', or 'strict', "
+                         f"got {analyze!r}")
+    from repro.analysis import AnalysisError, check_plan, errors
+    findings = check_plan(p, config)
+    for f in findings:
+        print(f"analysis: {f}", file=sys.stderr)
+    if analyze == "strict" and errors(findings):
+        raise AnalysisError(errors(findings))
+    return p
+
+
 def plan(tensor: SparseTensor | TensorStore, config: DecomposeConfig, *,
          cache_dir: str | None = None,
-         num_devices: int | None = None) -> CPPlan:
+         num_devices: int | None = None,
+         analyze: str = "off") -> CPPlan:
     """Preprocess ``tensor`` for ``config``: autotune the blocking geometry
     (if requested), partition every mode, and — when ``cache_dir`` is given —
     reuse an on-disk plan with a matching content signature instead of
@@ -276,6 +297,11 @@ def plan(tensor: SparseTensor | TensorStore, config: DecomposeConfig, *,
     no chunk data is read here — and the returned plan's modes materialize
     per-device shards by streaming at compile time
     (:class:`~repro.store.StoreModePartition`).
+
+    ``analyze`` runs the :mod:`repro.analysis` plan rules on the result
+    (built OR cache-loaded — a stale cached plan fails the same checks):
+    ``"strict"`` raises on any error finding before the plan escapes,
+    ``"warn"`` reports findings to stderr, ``"off"`` (default) skips.
     """
     nd = _resolve_num_devices(config, num_devices)
     tile, block_p = _resolve_geometry(tensor.nmodes, config)
@@ -289,7 +315,7 @@ def plan(tensor: SparseTensor | TensorStore, config: DecomposeConfig, *,
                 p = partition_mod.validate_plan(
                     load_plan(entry, expect_signature=sig))
                 CACHE_STATS["hits"] += 1
-                return p
+                return _analyze_plan(p, config, analyze)
             except (PlanSignatureError, OSError, KeyError, ValueError):
                 pass  # corrupted/stale entry: rebuild below and overwrite
 
@@ -309,4 +335,4 @@ def plan(tensor: SparseTensor | TensorStore, config: DecomposeConfig, *,
             save_plan(p, os.path.join(cache_dir, sig[:32]), signature=sig)
         except OSError:
             pass  # read-only filesystems: the plan still works in-process
-    return p
+    return _analyze_plan(p, config, analyze)

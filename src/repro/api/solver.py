@@ -465,6 +465,19 @@ class CPSolver:
             "per_sweep": list(self.stream_events),
         }
 
+    def audit(self, *, modes=None) -> list:
+        """Run the :mod:`repro.analysis` passes against THIS compiled
+        session: the plan rules over the live (possibly rebalanced) plan
+        and the HLO audit over the jitted updates' lowered/compiled text
+        (gather-free EC, no host transfers, collective-permute when
+        overlapped, donation aliasing, bf16 wire). Lowering each mode's
+        update again is a deliberate sync point, like
+        :meth:`exchange_report`. Returns the findings (empty == clean)."""
+        from repro.analysis import check_plan, hlo_audit
+        findings = check_plan(self.plan, self.config)
+        findings += hlo_audit.audit_solver(self, modes=modes)
+        return findings
+
     def result(self) -> CPResult:
         """Snapshot the current state as a host-side :class:`CPResult`
         (forces a sync: factors unpadded to global layout, fits to floats)."""

@@ -78,6 +78,17 @@ class ExchangeSpec:
         """Kwargs for :func:`repro.comm.collectives.merge_partials`."""
         return dict(merge=self.merge, wire_dtype=self.wire)
 
+    def expected_hlo_markers(self, *, multi_device: bool) -> dict:
+        """What this spec promises the lowered update must contain — the
+        contract :mod:`repro.analysis.hlo_audit` (AH-H003/AH-H005) checks.
+        On a single device no collectives (and hence no wire casts) lower
+        at all, so every marker is vacuously absent."""
+        return {
+            "collective_permute":
+                multi_device and self.variant == "overlap",
+            "wire_bf16": multi_device and self.wire_dtype == "bfloat16",
+        }
+
 
 def resolve_exchange_spec(config=None, *, plan=None, rank: int | None = None,
                           mesh=None) -> ExchangeSpec:

@@ -33,8 +33,9 @@ from repro.kernels.mttkrp_pallas import ec_blocked
 from repro.kernels.mttkrp_sorted import ec_sorted
 
 __all__ = ["mttkrp_local", "default_interpret", "resolve_variant",
-           "kernel_kwargs_from_config", "KERNEL_VARIANTS", "ENV_VARIANT",
-           "DEFAULT_VARIANT", "DEFAULT_NUM_BUFFERS"]
+           "kernel_kwargs_from_config", "variant_vmem_bytes",
+           "KERNEL_VARIANTS", "ENV_VARIANT", "DEFAULT_VARIANT",
+           "DEFAULT_NUM_BUFFERS"]
 
 ENV_VARIANT = "AMPED_EC_VARIANT"
 DEFAULT_VARIANT = "blocked"
@@ -81,6 +82,34 @@ def kernel_kwargs_from_config(cfg, *, nmodes: int | None = None,
         num_buffers=DEFAULT_NUM_BUFFERS if num_buffers is None
         else int(num_buffers),
     )
+
+
+def variant_vmem_bytes(variant: str, *, tile: int, block_p: int, rank: int,
+                       nin: int, num_buffers: int = DEFAULT_NUM_BUFFERS,
+                       itemsize: int = 4) -> int:
+    """Model of one grid step's VMEM working set per EC variant — the
+    quantity the autotuner's candidate grid implicitly bounds and rule
+    AP-P006 (repro.analysis.plan_rules) checks against the budget.
+
+    Per block the kernels hold: the (block_p,) values and row-in-tile
+    slabs, the per-input factor rows ((block_p, rank) per input — times
+    the DMA ring depth for the fused/sorted in-kernel gather), the
+    (tile, rank) output tile accumulator, and — for ``sorted`` — the
+    (S+1,)+(S,) segment descriptors with S = tile + 1. ``ref`` runs no
+    Pallas kernel and models as 0."""
+    if variant == "ref":
+        return 0
+    slabs = 2 * block_p * itemsize            # values + row_in_tile
+    out_tile = tile * rank * itemsize
+    if variant == "blocked":
+        # pre-gathered (block_p, rank) input slabs, one per input mode
+        gathered = nin * block_p * rank * itemsize
+        return slabs + gathered + out_tile
+    # fused/sorted: (block_p, nin) index slab + ring of gathered rows
+    idx_slab = block_p * nin * itemsize
+    ring = num_buffers * nin * block_p * rank * itemsize
+    seg = (2 * tile + 3) * itemsize if variant == "sorted" else 0
+    return slabs + idx_slab + ring + out_tile + seg
 
 
 def _mask_unvisited(out: jax.Array, tile_mask: jax.Array | None,

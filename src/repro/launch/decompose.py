@@ -84,6 +84,11 @@ def main():
                     metavar="MB",
                     help="per-device memory budget for --stream, in MiB "
                          "(covers all stream buffers of one mode shard)")
+    ap.add_argument("--analyze", choices=("off", "warn", "strict"),
+                    default="off",
+                    help="run the repro.analysis plan rules on the plan "
+                         "(strict: abort on any error finding) and, with "
+                         "warn/strict, audit the compiled solver's HLO")
     args = ap.parse_args()
 
     import repro.api as api
@@ -126,10 +131,19 @@ def main():
           f"/{cfg.exchange.wire_dtype}")
 
     t0 = time.time()
-    plan = api.plan(t, cfg, cache_dir=args.plan_cache)
+    plan = api.plan(t, cfg, cache_dir=args.plan_cache,
+                    analyze=args.analyze)
     t_plan = time.time() - t0
     solver = api.compile(plan, cfg)
     t_compile = time.time() - t0 - t_plan
+    if args.analyze != "off":
+        findings = solver.audit()
+        for f in findings:
+            print(f"analysis: {f}")
+        if args.analyze == "strict" and \
+                any(f.severity == "error" for f in findings):
+            from repro.analysis import AnalysisError, errors
+            raise AnalysisError(errors(findings))
     if args.ckpt and not args.no_resume:
         solver.restore()
     t1 = time.time()

@@ -25,8 +25,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.models import sharding as shard_rules
+from repro.models import lm_serve as serve_mod
 from repro.models.transformer import Model, ModelConfig
-from repro.serving import serve as serve_mod
 from repro.training import optimizer as opt_mod
 from repro.training.train_step import make_train_step
 

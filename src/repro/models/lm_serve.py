@@ -1,0 +1,111 @@
+"""LM serving drivers: prefill_step / decode_step wrappers and
+greedy/sampled generation, plus cache sharding specs (incl.
+sequence-parallel long decode).
+
+Lives next to the transformer model it drives; the old import path
+``repro.serving.serve`` remains as a deprecated shim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.sharding import dp_axes
+from repro.models.transformer import Model
+
+__all__ = ["make_prefill_step", "make_decode_step", "cache_specs", "generate"]
+
+
+def make_prefill_step(model: Model, cache_len: int):
+    def prefill_step(params, tokens, extra=None):
+        return model.prefill(params, tokens, cache_len, extra=extra)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+    return decode_step
+
+
+def cache_specs(model: Model, mesh: Mesh, *, batch: int,
+                seq_shard: bool = False,
+                kv_layout: str = "auto") -> Any:
+    """PartitionSpecs for the decode cache pytree.
+
+    ``kv_layout``:
+      * "auto"  — KV heads over "model" when divisible, else the cache
+        *sequence* dim over "model" (flash-decoding style: softmax max/sum
+        over S lower to small cross-device collectives under GSPMD). With
+        kv_heads=8 on a 16-way model axis, head-replication would put the
+        whole cache on every model-axis device (nemotron decode_32k:
+        196 GB/device) — sequence sharding is what makes these cells fit.
+      * "replicated_heads" — the naive baseline (heads or nothing).
+    ``seq_shard=True``: shard S over the DP axes as well (long_500k, where
+    batch==1 leaves DP idle).
+    """
+    cfg = model.cfg
+    dp = dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    tp_size = mesh.shape[tp] if tp else 1
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    batch_ax = dp if (batch % max(dp_size, 1) == 0 and batch > 1
+                      and not seq_shard) else None
+
+    specs = []
+    for spec_l in cfg.pattern:
+        c: dict[str, Any] = {}
+        if spec_l.mixer == "attn":
+            heads_ok = tp is not None and cfg.n_kv_heads % tp_size == 0
+            head_ax = tp if heads_ok else None
+            if seq_shard:
+                seq_ax = dp
+            elif not heads_ok and kv_layout == "auto":
+                seq_ax = tp
+            else:
+                seq_ax = None
+            kv = P(None, batch_ax, seq_ax, head_ax, None)  # (cyc,B,S,KVH,hd)
+            c["mixer"] = {"k": kv, "v": kv}
+        elif spec_l.mixer == "mla":
+            seq_ax = dp if seq_shard else (tp if kv_layout == "auto" else None)
+            c["mixer"] = {"ckv": P(None, batch_ax, seq_ax, None),
+                          "kr": P(None, batch_ax, seq_ax, None)}
+        elif spec_l.mixer == "cross_attn":
+            c["mixer"] = {}
+        elif spec_l.mixer == "mamba":
+            c["mixer"] = {"conv": P(None, batch_ax, None, tp),
+                          "h": P(None, batch_ax, tp, None)}
+        elif spec_l.mixer == "rwkv6":
+            c["mixer"] = {"shift": P(None, batch_ax, None),
+                          "s": P(None, batch_ax, tp, None, None)}
+        if spec_l.ffn == "rwkv_cm":
+            c["cm_shift"] = P(None, batch_ax, None)
+        specs.append(c)
+    out = {"layers": tuple(specs), "pos": P()}
+    return out
+
+
+def generate(model: Model, params, prompt, *, steps: int, cache_len: int,
+             extra=None, temperature: float = 0.0, key=None):
+    """Greedy (or sampled) autoregressive generation — the end-to-end
+    serving example path."""
+    logits, cache = model.prefill(params, prompt, cache_len, extra=extra)
+    out = []
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    for i in range(steps):
+        out.append(tok)
+        logits, cache = model.decode_step(params, tok, cache)
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1] / temperature)[:, None]
+        else:
+            tok = jnp.argmax(logits[:, -1:], axis=-1)
+    return jnp.concatenate(out, axis=1)

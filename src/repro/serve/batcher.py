@@ -62,9 +62,9 @@ class MicroBatcher:
         self.max_depth = int(max_depth)
         self.default_deadline_s = float(default_deadline_s)
         self.metrics = metrics or ServiceMetrics()
-        self._queue: list[_Pending] = []
         self._cv = threading.Condition()
-        self._closed = False
+        self._queue: list[_Pending] = []  # guarded-by: _cv
+        self._closed = False              # guarded-by: _cv
         self._thread = threading.Thread(target=self._drain_loop,
                                         daemon=True, name="microbatcher")
         self._thread.start()
@@ -108,10 +108,13 @@ class MicroBatcher:
             self._closed = True
             self._cv.notify_all()
         self._thread.join()
-        for req in self._queue:
+        # swap the queue out under the lock, then fail the stranded
+        # requests without holding it (event.set wakes their callers)
+        with self._cv:
+            stranded, self._queue = self._queue, []
+        for req in stranded:
             req.error = RejectedError("service is shutting down")
             req.event.set()
-        self._queue.clear()
         self.metrics.set_gauge("queue_depth", 0)
 
     def __enter__(self) -> "MicroBatcher":

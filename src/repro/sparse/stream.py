@@ -51,6 +51,7 @@ from typing import Hashable, Iterable
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.analysis import runtime as _lockcheck
 from repro.core.mttkrp import (DeviceArrays, shard_plan_mode,
                                shard_super_shard)
 from repro.core.partition import CPPlan
@@ -86,8 +87,9 @@ class WindowSpill:
         self.root = root if root is not None else tempfile.mkdtemp(
             prefix="repro-window-spill-")
         os.makedirs(self.root, exist_ok=True)
-        self.hits = 0
-        self.saves = 0
+        self._lock = threading.Lock()
+        self.hits = 0   # guarded-by: _lock
+        self.saves = 0  # guarded-by: _lock
 
     def _path(self, mode: int, dev: int, key) -> str:
         # the key carries window AND static caps: the same tile window
@@ -103,7 +105,8 @@ class WindowSpill:
             return None
         with np.load(path) as z:
             arrs = tuple(z[n] for n in self._NAMES)
-        self.hits += 1
+        with self._lock:
+            self.hits += 1
         return arrs
 
     def save(self, mode: int, dev: int, key, arrs) -> None:
@@ -112,7 +115,14 @@ class WindowSpill:
         with open(tmp, "wb") as f:
             np.savez(f, **dict(zip(self._NAMES, arrs)))
         os.replace(tmp, path)
-        self.saves += 1
+        with self._lock:
+            self.saves += 1
+
+    def counters(self) -> tuple[int, int]:
+        """``(hits, saves)`` snapshot, consistent while builds are
+        running on a streamer's prefetch thread."""
+        with self._lock:
+            return self.hits, self.saves
 
     def close(self) -> None:
         """Remove the spill directory iff this spill created it."""
@@ -140,8 +150,8 @@ class _StreamerBase:
                                         thread_name_prefix="shard-prefetch")
         self._closed = False
         self._stats_lock = threading.Lock()
-        self._cur_bytes = 0
-        self.stats = {
+        self._cur_bytes = 0  # guarded-by: _stats_lock
+        self.stats = {  # guarded-by: _stats_lock
             "transfer_s": 0.0,       # builder wall time (host→device)
             "exposed_s": 0.0,        # time the consumer blocked on a load
             "builds": 0,
@@ -168,12 +178,14 @@ class _StreamerBase:
             self.stats["bytes_streamed"] += self._key_nbytes(key)
         return arrays
 
-    def _track_add(self, key) -> None:
+    def _track_add(self, key) -> None:  # holds: _stats_lock
+        _lockcheck.assert_holds(self._stats_lock, "_stats_lock")
         self._cur_bytes += self._key_nbytes(key)
         if self._cur_bytes > self.stats["peak_resident_bytes"]:
             self.stats["peak_resident_bytes"] = self._cur_bytes
 
-    def _track_drop(self, key) -> None:
+    def _track_drop(self, key) -> None:  # holds: _stats_lock
+        _lockcheck.assert_holds(self._stats_lock, "_stats_lock")
         self._cur_bytes -= self._key_nbytes(key)
 
     def _dispatch(self, key) -> None:
@@ -182,7 +194,8 @@ class _StreamerBase:
             raise RuntimeError(f"{type(self).__name__} is closed")
         if key in self._resident or key in self._pending:
             return
-        self._track_add(key)
+        with self._stats_lock:
+            self._track_add(key)
         self._pending[key] = self._pool.submit(self._timed_build, key)
 
     def _wait(self, key) -> DeviceArrays:
@@ -194,10 +207,10 @@ class _StreamerBase:
         if fut is not None:
             self._resident[key] = fut.result()
         elif key not in self._resident:
-            self._track_add(key)
-            self._resident[key] = self._timed_build(key)
             with self._stats_lock:
+                self._track_add(key)
                 self.stats["cold_builds"] += 1
+            self._resident[key] = self._timed_build(key)
         else:
             t0 = None
         if t0 is not None:
@@ -225,7 +238,8 @@ class _StreamerBase:
             if victim is None:
                 break
             arrays = self._resident.pop(victim)
-            self._track_drop(victim)
+            with self._stats_lock:
+                self._track_drop(victim)
             del arrays  # drop device references → frees HBM
         while over():
             stale = next((k for k in self._pending if k not in protect),
@@ -240,7 +254,8 @@ class _StreamerBase:
         fut = self._pending.pop(key, None)
         if fut is None:
             return
-        self._track_drop(key)
+        with self._stats_lock:
+            self._track_drop(key)
         if not fut.cancel():
             try:
                 fut.result()
@@ -276,8 +291,8 @@ class _StreamerBase:
         the prefetch overlapped behind compute."""
         with self._stats_lock:
             s = dict(self.stats)
+            s["resident_bytes"] = self._cur_bytes
         s["hidden_s"] = max(s["transfer_s"] - s["exposed_s"], 0.0)
-        s["resident_bytes"] = self._cur_bytes
         return s
 
     # -- lifecycle ---------------------------------------------------------
@@ -294,7 +309,8 @@ class _StreamerBase:
         self._pool.shutdown(wait=True)
         for key in list(self._resident):
             self._resident.pop(key)
-            self._track_drop(key)
+            with self._stats_lock:
+                self._track_drop(key)
 
     def __enter__(self):
         return self
@@ -344,7 +360,8 @@ class ShardStreamer(_StreamerBase):
             self._settle(mode)
             if mode in self._resident:
                 self._resident.pop(mode)
-                self._track_drop(mode)
+                with self._stats_lock:
+                    self._track_drop(mode)
         self.plan = plan
         for mode in sorted(stale):
             if len(self._resident) + len(self._pending) >= self.prefetch + 1:
@@ -389,8 +406,9 @@ class SuperShardStreamer(_StreamerBase):
     def stats_snapshot(self) -> dict:
         s = super().stats_snapshot()
         if self.spill is not None:
-            s["spill_hits"] = self.spill.hits
-            s["spill_saves"] = self.spill.saves
+            hits, saves = self.spill.counters()
+            s["spill_hits"] = hits
+            s["spill_saves"] = saves
         return s
 
     def close(self) -> None:

@@ -458,6 +458,63 @@ class ModeStreamPlan:
         """Peak streamed bytes a device can hold under this plan."""
         return self.buffers * self.shard_bytes
 
+    def validate_against(self, part, *, nmodes: int) -> list[str]:
+        """Invariant check of this split against its source partition —
+        the byte model and window algebra rule AP-P007
+        (:mod:`repro.analysis.plan_rules`) reports on. Returns violation
+        messages (empty == consistent): the shard byte model must match
+        :func:`stream_shard_nbytes`, ``buffers`` shards must fit the
+        budget, every device's real windows must tile-disjointly cover
+        ``[0, n_tiles)`` with padding windows ``(0, 0)`` only, and no
+        window's padded slot count may exceed ``nnz_cap``."""
+        out: list[str] = []
+        model = stream_shard_nbytes(self.nnz_cap, self.nblocks,
+                                    self.n_tiles, nmodes)
+        if self.shard_bytes != model:
+            out.append(f"shard_bytes={self.shard_bytes} != byte model "
+                       f"{model} (nnz_cap={self.nnz_cap} "
+                       f"nblocks={self.nblocks} n_tiles={self.n_tiles} "
+                       f"nmodes={nmodes})")
+        if self.resident_bound_bytes() > self.budget_bytes:
+            out.append(f"{self.buffers} resident super-shards x "
+                       f"{self.shard_bytes} B = "
+                       f"{self.resident_bound_bytes()} B exceed the "
+                       f"budget {self.budget_bytes} B")
+        if self.nnz_cap % max(part.block_p, 1) or \
+                self.nnz_cap != self.nblocks * part.block_p:
+            out.append(f"nnz_cap={self.nnz_cap} is not nblocks="
+                       f"{self.nblocks} whole blocks of block_p="
+                       f"{part.block_p}")
+        tc_pad = np.asarray(part._dev_tc_pad)
+        for dev, wins in enumerate(self.windows):
+            cursor, padding = 0, False
+            for k, (t0, t1) in enumerate(wins):
+                if (t0, t1) == (0, 0) and cursor > 0:
+                    padding = True
+                    continue
+                if padding:
+                    out.append(f"dev {dev}: real window {k} after "
+                               f"padding windows")
+                    break
+                if t0 != cursor or t1 <= t0 or t1 > self.n_tiles:
+                    out.append(f"dev {dev}: window {k} = ({t0}, {t1}) "
+                               f"does not continue coverage at tile "
+                               f"{cursor}")
+                    break
+                need = int(tc_pad[dev, t0:t1].sum())
+                if need > self.nnz_cap:
+                    out.append(f"dev {dev}: window ({t0}, {t1}) holds "
+                               f"{need} padded slots > nnz_cap="
+                               f"{self.nnz_cap} — the densest-tile floor "
+                               f"is violated")
+                cursor = t1
+            else:
+                if cursor != self.n_tiles and not (cursor == 0
+                                                   and not wins):
+                    out.append(f"dev {dev}: windows cover tiles "
+                               f"[0, {cursor}) of [0, {self.n_tiles})")
+        return out
+
 
 def stream_shard_nbytes(nnz_cap: int, nblocks: int, n_tiles: int,
                         nmodes: int) -> int:

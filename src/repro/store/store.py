@@ -153,7 +153,9 @@ class TensorStore:
         """Exact nnz count per index of ``mode`` — read from the binary
         stats sidecar, O(index space), no chunk data touched."""
         self.access_stats["hist_reads"] += 1
-        return np.asarray(self._hists[mode], np.int64)
+        # np.array (not asarray): when the sidecar dtype is already int64,
+        # asarray returns a view that pins the np.memmap handle open
+        return np.array(self._hists[mode], np.int64)
 
     def reset_access_stats(self) -> None:
         self.access_stats = {"chunk_reads": 0, "nnz_read": 0,

@@ -73,7 +73,9 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: threading.Thread | None = None
-        self._save_exc: BaseException | None = None
+        self._exc_lock = threading.Lock()
+        # written by the save thread, consumed by wait()
+        self._save_exc: BaseException | None = None  # guarded-by: _exc_lock
         os.makedirs(directory, exist_ok=True)
 
     # -- paths -------------------------------------------------------------
@@ -115,7 +117,8 @@ class CheckpointManager:
                 try:
                     self._save_sync_flat(step, flat)
                 except BaseException as e:  # surfaced by the next wait()
-                    self._save_exc = e
+                    with self._exc_lock:
+                        self._save_exc = e
 
             self._thread = threading.Thread(target=run, daemon=True)
             self._thread.start()
@@ -132,8 +135,9 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self._save_exc is not None:
+        with self._exc_lock:
             exc, self._save_exc = self._save_exc, None
+        if exc is not None:
             raise exc
 
     def _save_sync(self, step: int, payload: Any) -> None:

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models.transformer import Model
-from repro.serving.serve import cache_specs, generate
+from repro.models.lm_serve import cache_specs, generate
 
 
 def test_generate_greedy_deterministic():
