@@ -82,23 +82,28 @@ on TPU the same script reports real GFLOP/s.
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import run_subprocess_bench, save_result, timeit
+from repro.obs import trace as obs_trace
 
 VARIANTS = ("ref", "blocked", "fused", "sorted")
 
 SKEW_SCRIPT = r"""
-import json, time
+import json
 import numpy as np
 import jax
 assert jax.device_count() == 4, jax.device_count()
 
 import repro.api as api
 from repro.core.coo import SparseTensor
+from repro.obs import clock
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
 
 NNZ = {nnz}
 rng = np.random.default_rng(0)
@@ -146,20 +151,58 @@ for name, cfg in (
     solver = api.compile(api.plan(t, cfg), cfg)
     solver.run(1)                       # compile + warm every mode
     solver.reset()
-    t0 = time.perf_counter()
+    t0 = clock.now()
     res = solver.run({ab_sweeps})
-    ab[name] = {{"per_sweep_s": (time.perf_counter() - t0) / {ab_sweeps},
+    ab[name] = {{"per_sweep_s": (clock.now() - t0) / {ab_sweeps},
                  "fit": float(res.fits[-1])}}
     facs[name] = [np.asarray(f) for f in res.factors]
 ab["factors_bitwise_equal"] = bool(all(
     (a == b).all() for a, b in zip(facs["ref"], facs["sorted"])))
 out["sorted_ab"] = ab
+
+# --- observability rider: traced mini-run + disabled-span overhead gate --
+# (a) tracing ON: 2 sweeps through the traced resident path must produce a
+# schema-valid span tree (sweep -> mode_update -> ec/exchange) covering
+# >= 95% of the run span — the deterministic span counts land in the
+# artifact and check_trajectory gates them;
+obs_trace.reset()
+obs_trace.enable()
+tr_cfg = base.with_overrides({{"schedule.rebalance": "off"}})
+tr_solver = api.compile(api.plan(t, tr_cfg), tr_cfg)
+tr_solver.run(2)
+obs_trace.disable()
+trace = obs_export.chrome_trace(obs_trace.get_tracer().records())
+val = obs_export.validate_trace(trace, min_coverage=0.95)
+
+# (b) tracing OFF: per-call cost of a disabled span over the span calls
+# one traced sweep would make, as a fraction of the measured ref sweep —
+# the <= 2% acceptance gate for instrumentation left in the hot path
+N = 200000
+t0 = clock.now()
+for _ in range(N):
+    with obs_trace.span("x", mode=0):
+        pass
+span_cost = (clock.now() - t0) / N
+nmodes = 3
+spans_per_sweep = 1 + 3 * nmodes          # sweep + per-mode {{mode,ec,exch}}
+per_sweep_s = ab["ref"]["per_sweep_s"]
+overhead_frac = spans_per_sweep * span_cost / per_sweep_s
+out["obs"] = {{
+    "trace_valid": bool(val["ok"]),
+    "coverage": float(val["coverage"]),
+    "span_counts": val["span_counts"],
+    "traced_sweeps": 2,
+    "disabled_span_ns": span_cost * 1e9,
+    "spans_per_sweep": spans_per_sweep,
+    "overhead_frac_disabled": overhead_frac,
+    "overhead_ok": bool(overhead_frac <= 0.02),
+}}
 print("RESULT_JSON:" + json.dumps(out))
 """
 
 
 EXCHANGE_SCRIPT = r"""
-import json, time
+import json
 import numpy as np
 import jax
 assert jax.device_count() == 4, jax.device_count()
@@ -167,6 +210,7 @@ assert jax.device_count() == 4, jax.device_count()
 import repro.api as api
 from repro import comm
 from repro.core.coo import random_sparse
+from repro.obs import clock
 
 t = random_sparse((512, 96, 64), {nnz}, seed=3, distribution="zipf")
 base = api.paper({{"rank": 16, "runtime.tol": 0.0,
@@ -181,11 +225,11 @@ def timed_run(overrides, sweeps={sweeps}, repeats={repeats}):
         best = float("inf")
         for _ in range(repeats):
             solver.reset()
-            t0 = time.perf_counter()
+            t0 = clock.now()
             for _ in range(sweeps):
                 solver.sweep()
             fit = float(solver.state.fits[-1])   # sync point
-            best = min(best, (time.perf_counter() - t0) / sweeps)
+            best = min(best, (clock.now() - t0) / sweeps)
         rep = solver.exchange_report()
         factors = solver.result().factors
     return best, fit, rep, factors
@@ -239,16 +283,17 @@ def bench_exchange_overlap(*, nnz: int = 40000, sweeps: int = 6,
 
 
 INGEST_COO_SCRIPT = r"""
-import json, resource, time, tracemalloc
+import json, resource, tracemalloc
 import repro.api as api
+from repro.obs import clock
 from repro.sparse.io import read_tns
 base_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
 tracemalloc.start()
-t0 = time.perf_counter()
+t0 = clock.now()
 t = read_tns({tns!r})
 cfg = api.paper({{"runtime.num_devices": 1}})
 plan = api.plan(t, cfg)
-dt = time.perf_counter() - t0
+dt = clock.now() - t0
 _, alloc_peak = tracemalloc.get_traced_memory()
 tracemalloc.stop()
 peak_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
@@ -259,19 +304,20 @@ print("RESULT_JSON:" + json.dumps({{
 """
 
 INGEST_STORE_SCRIPT = r"""
-import json, os, resource, time, tracemalloc
+import json, os, resource, tracemalloc
 import repro.api as api
+from repro.obs import clock
 from repro.store import TensorStore, convert_tns
 report = convert_tns({tns!r}, {store!r}, chunk_nnz={chunk_nnz})
 store_bytes = sum(os.path.getsize(os.path.join({store!r}, f))
                   for f in os.listdir({store!r}))
 base_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
 tracemalloc.start()
-t0 = time.perf_counter()
+t0 = clock.now()
 st = TensorStore({store!r})
 cfg = api.paper({{"runtime.num_devices": 1}})
 plan = api.plan(st, cfg)
-dt = time.perf_counter() - t0
+dt = clock.now() - t0
 _, alloc_peak = tracemalloc.get_traced_memory()
 tracemalloc.stop()
 peak_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
@@ -442,10 +488,11 @@ def bench_stream_overlap(*, nnz: int = 1_200_000, sweeps: int = 3,
 
 
 SERVE_SCRIPT = r"""
-import json, os, time
+import json, os
 import numpy as np
 import repro.api as api
 from repro.api.config import DecomposeConfig, RuntimeConfig
+from repro.obs import clock
 from repro.core.coo import SparseTensor
 from repro.serve import CPService, store_fit
 from repro.sparse.io import make_lowrank_tensor
@@ -487,16 +534,16 @@ with CPService.boot(ckpt, store=store, config=_cfg()) as svc:
     # --- throughput: batched jitted engine vs per-request loop ----------
     coords = np.stack([rng.integers(0, s, size=ROWS) for s in SHAPE], 1)
     fitted.reconstruct_at(coords[:1])                  # warm the loop path
-    t0 = time.perf_counter()
+    t0 = clock.now()
     loop_vals = np.concatenate([fitted.reconstruct_at(coords[i:i + 1])
                                 for i in range(ROWS)])
-    loop_s = time.perf_counter() - t0
+    loop_s = clock.now() - t0
     svc.engine.reconstruct_batch(coords)               # compile the bucket
     best = float("inf")
     for _ in range(3):
-        t0 = time.perf_counter()
+        t0 = clock.now()
         batched = svc.engine.reconstruct_batch(coords)
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, clock.now() - t0)
     out["per_request_loop_s"] = loop_s
     out["batched_s"] = best
     out["batched_qps_rows"] = ROWS / best
@@ -508,9 +555,9 @@ with CPService.boot(ckpt, store=store, config=_cfg()) as svc:
         lat = []
         for _ in range(n):
             c = np.stack([rng.integers(0, s, size=BATCH) for s in SHAPE], 1)
-            t0 = time.perf_counter()
+            t0 = clock.now()
             svc.reconstruct(c)
-            lat.append(time.perf_counter() - t0)
+            lat.append(clock.now() - t0)
         return np.asarray(lat)
 
     # --- latency floor, then the same probe during a background refit ---
@@ -718,7 +765,7 @@ def bench_point(nmodes: int, rank: int, nnz: int, *, repeats: int = 3,
         jitted = jax.jit(run)
         outs[variant] = np.asarray(jitted(*vargs))
         dt = timeit(lambda: jitted(*vargs).block_until_ready(),
-                    repeats=repeats)
+                    repeats=repeats, label=f"ec:{variant}")
         hbm = modelled_hbm_bytes(variant, nnz_pad, rank, nin, part.rows_max,
                                  num_buffers=kernel_kw["num_buffers"],
                                  tile=part.tile, block_p=part.block_p)
@@ -747,9 +794,9 @@ def bench_point(nmodes: int, rank: int, nnz: int, *, repeats: int = 3,
     assert np.array_equal(np.asarray(j_plain(*args_s)),
                           np.asarray(j_hint(*args_s)))
     t_plain = timeit(lambda: j_plain(*args_s).block_until_ready(),
-                     repeats=max(repeats, 3))
+                     repeats=max(repeats, 3), label="ref_sorted_unhinted")
     t_hint = timeit(lambda: j_hint(*args_s).block_until_ready(),
-                    repeats=max(repeats, 3))
+                    repeats=max(repeats, 3), label="ref_sorted_hinted")
     point["ref_sorted_hint"] = {
         "time_unhinted_s": t_plain,
         "time_hinted_s": t_hint,
@@ -790,6 +837,27 @@ def main() -> None:
                     help="skip the serving-path load-test scenario")
     args = ap.parse_args()
 
+    # span tracing over the whole bench: every scenario runs inside a span,
+    # and the artifact carries a per-scenario span summary (counts are
+    # deterministic; times informational) instead of hand-rolled timers
+    tracer = obs_trace.get_tracer()
+    obs_trace.enable()
+    per_scenario: dict[str, dict] = {}
+
+    @contextlib.contextmanager
+    def scenario(name: str):
+        before = tracer.summary()
+        with tracer.span(name):
+            yield
+        after = tracer.summary()
+        per_scenario[name] = {
+            k: {"count": v["count"]
+                - before.get(k, {"count": 0})["count"],
+                "total_s": v["total_s"]
+                - before.get(k, {"total_s": 0.0})["total_s"]}
+            for k, v in after.items()
+            if v["count"] > before.get(k, {"count": 0})["count"]}
+
     if args.quick:
         grid = [(3, 8, 1024)]
     else:
@@ -799,26 +867,28 @@ def main() -> None:
                 for nnz in (2048, 8192)]
 
     points = []
-    for nmodes, rank, nnz in grid:
-        pt = bench_point(nmodes, rank, nnz, repeats=args.repeats)
-        f, b = pt["variants"]["fused"], pt["variants"]["blocked"]
-        s, h = pt["variants"]["sorted"], pt["ref_sorted_hint"]
-        print(f"nmodes={nmodes} R={rank} nnz={nnz}: "
-              f"fused {f['time_s']*1e3:.2f}ms "
-              f"(model {f['modelled_hbm_bytes']/1e6:.2f}MB) vs blocked "
-              f"{b['time_s']*1e3:.2f}ms "
-              f"(model {b['modelled_hbm_bytes']/1e6:.2f}MB); sorted model "
-              f"{s['modelled_hbm_bytes']/1e6:.2f}MB "
-              f"({s['modelled_flops']/1e6:.2f}MF vs fused "
-              f"{f['modelled_flops']/1e6:.2f}MF); ref sorted-hint "
-              f"{h['speedup']:.3f}x")
-        points.append(pt)
+    with scenario("kernel_grid"):
+        for nmodes, rank, nnz in grid:
+            pt = bench_point(nmodes, rank, nnz, repeats=args.repeats)
+            f, b = pt["variants"]["fused"], pt["variants"]["blocked"]
+            s, h = pt["variants"]["sorted"], pt["ref_sorted_hint"]
+            print(f"nmodes={nmodes} R={rank} nnz={nnz}: "
+                  f"fused {f['time_s']*1e3:.2f}ms "
+                  f"(model {f['modelled_hbm_bytes']/1e6:.2f}MB) vs blocked "
+                  f"{b['time_s']*1e3:.2f}ms "
+                  f"(model {b['modelled_hbm_bytes']/1e6:.2f}MB); sorted "
+                  f"model {s['modelled_hbm_bytes']/1e6:.2f}MB "
+                  f"({s['modelled_flops']/1e6:.2f}MF vs fused "
+                  f"{f['modelled_flops']/1e6:.2f}MF); ref sorted-hint "
+                  f"{h['speedup']:.3f}x")
+            points.append(pt)
 
     skew = None
     if not args.skip_skew:
-        skew = bench_skew_rebalance(
-            nnz=12000 if args.quick else 40000,
-            sweeps=4 if args.quick else 6)
+        with scenario("skew_rebalance"):
+            skew = bench_skew_rebalance(
+                nnz=12000 if args.quick else 40000,
+                sweeps=4 if args.quick else 6)
         print(f"skew rebalance (4 dev, nnz={skew['nnz']}): max/mean "
               f"{skew['final_imbalance_off']:.3f} -> "
               f"{skew['final_imbalance_on']:.3f}, idle frac reduced by "
@@ -832,10 +902,11 @@ def main() -> None:
 
     xchg = None
     if not args.skip_exchange:
-        xchg = bench_exchange_overlap(
-            nnz=12000 if args.quick else 40000,
-            sweeps=3 if args.quick else 6,
-            repeats=2 if args.quick else 3)
+        with scenario("exchange_overlap"):
+            xchg = bench_exchange_overlap(
+                nnz=12000 if args.quick else 40000,
+                sweeps=3 if args.quick else 6,
+                repeats=2 if args.quick else 3)
         print(f"exchange overlap (4 dev, nnz={xchg['nnz']}): blocking "
               f"{xchg['blocking']['per_sweep_s'] * 1e3:.1f}ms/sweep vs "
               f"overlap {xchg['overlap']['per_sweep_s'] * 1e3:.1f}ms "
@@ -847,9 +918,10 @@ def main() -> None:
 
     ingest = None
     if not args.skip_ingest:
-        ingest = bench_ingest(
-            scale=2e-4 if args.quick else 1e-3,
-            chunk_nnz=(1 << 14) if args.quick else (1 << 17))
+        with scenario("ingest"):
+            ingest = bench_ingest(
+                scale=2e-4 if args.quick else 1e-3,
+                chunk_nnz=(1 << 14) if args.quick else (1 << 17))
         print(f"ingest ({ingest['profile']}, nnz={ingest['nnz']}): convert "
               f"{ingest['convert_mnnz_per_s']:.2f} Mnnz/s; store "
               f"{ingest['store_bytes'] / 1e6:.1f} MB vs text "
@@ -862,9 +934,10 @@ def main() -> None:
 
     stream = None
     if not args.skip_stream:
-        stream = bench_stream_overlap(
-            nnz=400_000 if args.quick else 1_200_000,
-            sweeps=2 if args.quick else 3)
+        with scenario("stream_overlap"):
+            stream = bench_stream_overlap(
+                nnz=400_000 if args.quick else 1_200_000,
+                sweeps=2 if args.quick else 3)
         print(f"stream overlap (nnz={stream['nnz']}): budget "
               f"{stream['budget_bytes'] / 2**20:.1f} MiB "
               f"({stream['budget_ratio']:.1f}x under shard bytes), shards "
@@ -880,10 +953,11 @@ def main() -> None:
 
     serve = None
     if not args.skip_serve:
-        serve = bench_serve_load(
-            nnz=3000 if args.quick else 6000,
-            rows=2048 if args.quick else 8192,
-            queries=80 if args.quick else 200)
+        with scenario("serve_load"):
+            serve = bench_serve_load(
+                nnz=3000 if args.quick else 6000,
+                rows=2048 if args.quick else 8192,
+                queries=80 if args.quick else 200)
         print(f"serve load (rows={serve['rows']}): batched "
               f"{serve['batched_s'] * 1e3:.2f}ms "
               f"({serve['batched_qps_rows']:.0f} rows/s) vs per-request "
@@ -927,6 +1001,7 @@ def main() -> None:
         "ingest": ingest,
         "stream_overlap": stream,
         "serve_load": serve,
+        "obs": {"per_scenario": per_scenario},
     }, also_root=True)
 
 

@@ -14,7 +14,10 @@ claim on a CPU-only CI container (wall times there are noise):
   ``ref_sorted_hint.parity`` segment_sum wall-time flag must not flip
   True -> False;
 * skew scenario: ``sorted_ab.factors_bitwise_equal`` (ref vs ec_sorted on
-  one row-sorted plan) must never flip True -> False;
+  one row-sorted plan) must never flip True -> False; its ``obs`` rider's
+  ``trace_valid`` / ``overhead_ok`` flags must not flip True -> False and
+  the traced mini-run's per-stage span counts — fully determined by
+  (sweeps, modes) — must match the old artifact exactly;
 * exchange: the modelled sweep volume must not grow beyond tolerance and
   ``bf16_volume_ratio`` must stay ~half the fp32 wire volume;
 * epoch streaming: ``fits_equal`` / ``peak_within_budget`` must not flip
@@ -125,6 +128,20 @@ def compare(old: dict, new: dict, tol: float) -> tuple[int, list[str]]:
                 failures.append("skew_rebalance.sorted_ab."
                                 "factors_bitwise_equal flipped "
                                 "True -> False")
+        oobs = osk.get("obs") or {}
+        nobs = nsk.get("obs") or {}
+        if oobs and nobs and \
+                oobs.get("traced_sweeps") == nobs.get("traced_sweeps"):
+            checked += 1
+            for flag in ("trace_valid", "overhead_ok"):
+                if oobs.get(flag) and not nobs.get(flag):
+                    failures.append(f"skew_rebalance.obs.{flag} flipped "
+                                    f"True -> False")
+            oc, nc = oobs.get("span_counts"), nobs.get("span_counts")
+            if oc is not None and nc is not None and oc != nc:
+                failures.append(f"skew_rebalance.obs.span_counts changed: "
+                                f"{oc} -> {nc} (stage structure is "
+                                f"deterministic at fixed sweeps/modes)")
 
     oe, ne = old.get("exchange_overlap"), new.get("exchange_overlap")
     if oe and ne and (oe.get("nnz"), oe.get("rank"), oe.get("devices")) == \

@@ -17,10 +17,11 @@ import json
 import os
 import subprocess
 import sys
-import time
 from typing import Callable
 
 import numpy as np
+
+from repro.obs import trace as obs_trace
 
 HERE = os.path.dirname(__file__)
 OUT_DIR = os.path.join(HERE, "..", "experiments", "bench")
@@ -30,14 +31,18 @@ H2D_BW = 64e9          # B/s host→device (paper: PCIe 64 GB/s)
 P2P_BW = 50e9          # B/s device↔device
 
 
-def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
+           label: str = "bench_fn") -> float:
+    """Best-of-``repeats`` wall time via :func:`repro.obs.trace.timed` —
+    always measured on the obs clock; when the span tracer is enabled each
+    repeat additionally records a ``label`` span into the trace."""
     for _ in range(warmup):
         fn(*args)
     best = float("inf")
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn(*args)
-        best = min(best, time.perf_counter() - t0)
+        with obs_trace.timed(label) as t:
+            fn(*args)
+        best = min(best, t.duration)
     return best
 
 

@@ -33,7 +33,8 @@ __all__ = ["DEFAULT_TARGETS", "lint_file", "lint_source",
 
 # repo-relative module files the CI sweep lints by default
 DEFAULT_TARGETS = ("sparse/stream.py", "serve/batcher.py",
-                   "training/checkpoint.py")
+                   "training/checkpoint.py", "obs/metrics.py",
+                   "obs/trace.py")
 
 _GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
 _HOLDS_RE = re.compile(r"#\s*holds:\s*([A-Za-z_][\w,\s]*)")

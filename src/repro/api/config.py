@@ -235,6 +235,12 @@ class RuntimeConfig:
     stream_buffers: int = 2         # resident super-shards (2 = double buf)
     stream_spill: bool = True       # on-disk window cache across sweeps
     stream_spill_dir: str | None = None  # spill location (None = tempdir)
+    # ``trace=True`` enables the repro.obs span tracer for this solver's
+    # lifetime: sweeps run a traced path that dispatches EC and exchange
+    # separately (bitwise-identical fits, documented sync points) so each
+    # stage gets its own host span. Off by default — the hot path then
+    # stays fully async and spans cost one dict lookup each.
+    trace: bool = False
 
     def __post_init__(self):
         # field-local checks only: streaming's cross-field requirement

@@ -27,6 +27,8 @@ import sys
 import jax
 import numpy as np
 
+from repro import obs
+from repro.obs import trace as obs_trace
 from repro.api.config import DecomposeConfig
 from repro.core import partition as partition_mod
 from repro.core.coo import SparseTensor
@@ -303,36 +305,39 @@ def plan(tensor: SparseTensor | TensorStore, config: DecomposeConfig, *,
     ``"strict"`` raises on any error finding before the plan escapes,
     ``"warn"`` reports findings to stderr, ``"off"`` (default) skips.
     """
-    nd = _resolve_num_devices(config, num_devices)
-    tile, block_p = _resolve_geometry(tensor.nmodes, config)
+    with obs_trace.span("plan", annotate=True):
+        nd = _resolve_num_devices(config, num_devices)
+        tile, block_p = _resolve_geometry(tensor.nmodes, config)
 
-    sig = None
-    if cache_dir is not None:
-        sig = plan_signature(tensor, config, num_devices=nd)
-        entry = os.path.join(cache_dir, sig[:32])
-        if os.path.exists(os.path.join(entry, "manifest.json")):
+        sig = None
+        if cache_dir is not None:
+            sig = plan_signature(tensor, config, num_devices=nd)
+            entry = os.path.join(cache_dir, sig[:32])
+            if os.path.exists(os.path.join(entry, "manifest.json")):
+                try:
+                    p = partition_mod.validate_plan(
+                        load_plan(entry, expect_signature=sig))
+                    CACHE_STATS["hits"] += 1
+                    obs.get_registry().inc("plan.cache_hits")
+                    return _analyze_plan(p, config, analyze)
+                except (PlanSignatureError, OSError, KeyError, ValueError):
+                    pass  # corrupted/stale entry: rebuild below and overwrite
+
+        CACHE_STATS["misses"] += 1
+        obs.get_registry().inc("plan.cache_misses")
+        if isinstance(tensor, TensorStore):
+            p = store_plan_mod.build_plan_from_store(
+                tensor, nd, strategy=config.resolved_policy(),
+                replication=config.partition.replication, tile=tile,
+                block_p=block_p, layout=config.partition.layout)
+        else:
+            p = partition_mod.build_plan(
+                tensor, nd, strategy=config.resolved_policy(),
+                replication=config.partition.replication, tile=tile,
+                block_p=block_p, layout=config.partition.layout)
+        if cache_dir is not None:
             try:
-                p = partition_mod.validate_plan(
-                    load_plan(entry, expect_signature=sig))
-                CACHE_STATS["hits"] += 1
-                return _analyze_plan(p, config, analyze)
-            except (PlanSignatureError, OSError, KeyError, ValueError):
-                pass  # corrupted/stale entry: rebuild below and overwrite
-
-    CACHE_STATS["misses"] += 1
-    if isinstance(tensor, TensorStore):
-        p = store_plan_mod.build_plan_from_store(
-            tensor, nd, strategy=config.resolved_policy(),
-            replication=config.partition.replication, tile=tile,
-            block_p=block_p, layout=config.partition.layout)
-    else:
-        p = partition_mod.build_plan(
-            tensor, nd, strategy=config.resolved_policy(),
-            replication=config.partition.replication, tile=tile,
-            block_p=block_p, layout=config.partition.layout)
-    if cache_dir is not None:
-        try:
-            save_plan(p, os.path.join(cache_dir, sig[:32]), signature=sig)
-        except OSError:
-            pass  # read-only filesystems: the plan still works in-process
-    return _analyze_plan(p, config, analyze)
+                save_plan(p, os.path.join(cache_dir, sig[:32]), signature=sig)
+            except OSError:
+                pass  # read-only filesystems: the plan still works in-process
+        return _analyze_plan(p, config, analyze)

@@ -30,17 +30,28 @@ new plan's ownership layout).
 """
 from __future__ import annotations
 
+import itertools
+import json
+
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro import comm
+from repro import comm, obs
 from repro.api.config import DecomposeConfig
 from repro.core import als as als_mod
 from repro.core import mttkrp as dmttkrp
 from repro.core.decompose import CPResult
 from repro.core.partition import CPPlan
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import EventLog, MetricsRegistry
+from repro.obs.profiler import StreamMonitor
 from repro.sparse.stream import ShardStreamer, SuperShardStreamer
+
+# distinguishes concurrent solvers' sections in the process-wide
+# obs.report() — names are never reused within a process
+_SOLVER_IDS = itertools.count(1)
 
 __all__ = ["CPSolver", "compile", "validate_factor_payload"]
 
@@ -98,8 +109,15 @@ class CPSolver:
         self.config = config
         self.mesh = mesh
         self.streaming = config.runtime.streaming
+        # unified observability: every report this solver serves is a view
+        # over this registry/event log (see repro.obs)
+        self.metrics = MetricsRegistry()
+        self.events = EventLog()
+        if config.runtime.trace:
+            obs_trace.enable()
         kernel_kw = config.kernel.mttkrp_kwargs(nmodes=plan.nmodes,
                                                 rank=config.rank)
+        self._kernel_kw = kernel_kw
         self.exchange_spec = comm.resolve_exchange_spec(
             config.exchange, plan=plan, rank=config.rank, mesh=mesh)
         if self.streaming:
@@ -127,17 +145,18 @@ class CPSolver:
                 from repro.sparse.stream import WindowSpill
                 spill = WindowSpill(config.runtime.stream_spill_dir)
             self.streamer = SuperShardStreamer(
-                plan, mesh, self.stream_plans, buffers=buffers, spill=spill)
+                plan, mesh, self.stream_plans, buffers=buffers, spill=spill,
+                events=self.events)
             self.updates = als_mod.make_streaming_sweep_updates(
                 plan, mesh, rank=config.rank,
                 exchange_spec=self.exchange_spec, **kernel_kw)
-            self.stream_events: list[dict] = []
         else:
             self.stream_plans = None
             # All modes stay resident (prefetch=nmodes): the streamer is
             # here for its async (re)placement, not capacity eviction —
             # out-of-HBM epoch streaming is the runtime.streaming path.
-            self.streamer = ShardStreamer(plan, mesh, prefetch=plan.nmodes)
+            self.streamer = ShardStreamer(plan, mesh, prefetch=plan.nmodes,
+                                          events=self.events)
             self.updates = als_mod.make_sweep_updates(
                 plan, mesh, exchange_spec=self.exchange_spec, **kernel_kw)
         self.rebalancer = None
@@ -163,12 +182,37 @@ class CPSolver:
                 kernel_kw=kernel_kw,
                 migrate=config.schedule.migrations_enabled,
                 member_nnz_caps=member_caps)
-        self.schedule_events: list[dict] = []
         self._ckpt_mgr = None
         if config.runtime.checkpoint_dir is not None:
             from repro.training.checkpoint import CheckpointManager
             self._ckpt_mgr = CheckpointManager(config.runtime.checkpoint_dir)
+        # traced resident sweeps need split EC/exchange dispatches — built
+        # lazily on the first traced sweep (see _traced_updates)
+        self._traced_updates_cache = None
+        self.metrics.register_provider("overlap", self.overlap_report)
+        self.metrics.register_provider("imbalance", self.imbalance_report)
+        self.metrics.register_provider(
+            "exchange", lambda: self.exchange_report(measure=False))
+        self.metrics.register_provider("stream",
+                                       self.streamer.stats_snapshot)
+        self._obs_name = f"solver.{next(_SOLVER_IDS)}"
+        obs.get_registry().register_provider(self._obs_name,
+                                             self.metrics.report)
         self.reset()
+
+    @property
+    def stream_events(self) -> list[dict]:
+        """Per-sweep streaming overlap records (what
+        :meth:`overlap_report` aggregates) — a stamp-stripped view over the
+        event log's ``stream_sweep`` events, value-identical to the plain
+        list this attribute used to be."""
+        return self.events.payloads("stream_sweep")
+
+    @property
+    def schedule_events(self) -> list[dict]:
+        """Rebalance-point event log — a stamp-stripped view over the
+        event log's ``rebalance`` events."""
+        return self.events.payloads("rebalance")
 
     @property
     def dev_arrays(self) -> list:
@@ -185,8 +229,12 @@ class CPSolver:
         """Release the session's background resources: cancels the
         streamer's pending prefetches and joins its executor so no
         in-flight ``device_put`` outlives the solver (and can touch a freed
-        plan). Idempotent; the solver is unusable afterwards."""
+        plan). Also deregisters the solver's section from the process-wide
+        ``obs.report()`` and closes any event-log sink. Idempotent; the
+        solver is unusable afterwards."""
         self.streamer.close()
+        obs.get_registry().unregister_provider(self._obs_name)
+        self.events.close_sink()
 
     def __enter__(self) -> "CPSolver":
         return self
@@ -258,37 +306,63 @@ class CPSolver:
         })
 
     # -- execution ---------------------------------------------------------
+    def _traced_updates(self):
+        """Split EC/exchange jitted triples for the RESIDENT plan — the
+        traced sweep path. Accumulating the fused MTTKRP's partial into a
+        zero accumulator then finishing (merge/exchange/solve) is bitwise
+        identical to the fused update; splitting the dispatch is what lets
+        each stage carry its own host span. Two extra compiles per mode,
+        paid once on the first traced sweep."""
+        if self._traced_updates_cache is None:
+            self._traced_updates_cache = als_mod.make_streaming_sweep_updates(
+                self.plan, self.mesh, rank=self.config.rank,
+                exchange_spec=self.exchange_spec, **self._kernel_kw)
+        return self._traced_updates_cache
+
     def sweep(self) -> als_mod.ALSState:
         """One full ALS sweep (all modes). Enqueues device work only; the
         appended fit is a device scalar (reading it blocks the host).
 
         In streaming mode each mode iterates its super-shards through the
         double-buffered streamer instead (fits bitwise identical), and the
-        sweep's transfer/exposed timings are appended to
-        :attr:`stream_events` (see :meth:`overlap_report`)."""
-        if self.streaming:
-            before = self.streamer.stats_snapshot()
-            self.state = als_mod.als_streaming_sweep(
-                self.plan, self.mesh, self.streamer, self.stream_plans,
-                self.state, self.updates)
-            after = self.streamer.stats_snapshot()
-            transfer = after["transfer_s"] - before["transfer_s"]
-            exposed = after["exposed_s"] - before["exposed_s"]
-            hidden = max(transfer - exposed, 0.0)
-            self.stream_events.append({
-                "sweep": self.state.sweep,
-                "transfer_s": transfer,
-                "exposed_s": exposed,
-                "hidden_s": hidden,
-                "overlap_fraction":
-                    hidden / transfer if transfer > 0 else None,
-                "shards_streamed":
-                    after["builds"] - before["builds"],
-            })
-        else:
-            self.state = als_mod.als_sweep(self.plan, self.mesh,
-                                           self.dev_arrays, self.state,
-                                           self.updates)
+        sweep's transfer/exposed timings are emitted as ``stream_sweep``
+        events (see :attr:`stream_events` / :meth:`overlap_report`).
+
+        With the span tracer enabled (``runtime.trace=True`` or
+        ``obs.trace.enable()``) a resident sweep runs
+        :func:`~repro.core.als.als_traced_sweep` instead — EC and exchange
+        as separate dispatches with their own spans, fits still bitwise
+        identical, at the documented cost of per-stage sync points."""
+        tracer = obs_trace.get_tracer()
+        with tracer.span("sweep", sweep=self.state.sweep + 1, annotate=True):
+            if self.streaming:
+                before = self.streamer.stats_snapshot()
+                self.state = als_mod.als_streaming_sweep(
+                    self.plan, self.mesh, self.streamer, self.stream_plans,
+                    self.state, self.updates)
+                after = self.streamer.stats_snapshot()
+                transfer = after["transfer_s"] - before["transfer_s"]
+                exposed = after["exposed_s"] - before["exposed_s"]
+                hidden = max(transfer - exposed, 0.0)
+                self.events.emit(
+                    "stream_sweep",
+                    sweep=self.state.sweep,
+                    transfer_s=transfer,
+                    exposed_s=exposed,
+                    hidden_s=hidden,
+                    overlap_fraction=(
+                        hidden / transfer if transfer > 0 else None),
+                    shards_streamed=after["builds"] - before["builds"],
+                )
+            elif tracer.enabled:
+                self.state = als_mod.als_traced_sweep(
+                    self.plan, self.mesh, self.dev_arrays, self.state,
+                    self._traced_updates())
+            else:
+                self.state = als_mod.als_sweep(self.plan, self.mesh,
+                                               self.dev_arrays, self.state,
+                                               self.updates)
+        self.events.emit("sweep", sweep=self.state.sweep)
         return self.state
 
     def rebalance_step(self):
@@ -320,7 +394,7 @@ class CPSolver:
                 self.streamer.plan = self.plan  # epoch bump only
             event["applied"] = applied
             event["epoch_after"] = self.plan.rebalance_epoch
-        self.schedule_events.append(event)
+        self.events.emit("rebalance", **event)
         return decision
 
     def run(self, iters: int, *, tol: float | None = None,
@@ -334,18 +408,24 @@ class CPSolver:
         if tol is None:
             tol = self.config.runtime.tol
         cadence = self.config.schedule.cadence
-        for _ in range(self.state.sweep, iters):
-            state = self.sweep()
-            if verbose:
-                print(f"sweep {state.sweep}: fit={float(state.fits[-1]):.6f}")
-            if self._ckpt_mgr is not None:
-                self.checkpoint()
-            if self.rebalancer is not None and state.sweep % cadence == 0 \
-                    and state.sweep < iters:
-                self.rebalance_step()
-            if tol > 0 and len(state.fits) >= 2 and \
-                    abs(float(state.fits[-1]) - float(state.fits[-2])) < tol:
-                break
+        with obs_trace.span("run", iters=iters, annotate=True):
+            for _ in range(self.state.sweep, iters):
+                state = self.sweep()
+                if verbose:
+                    print(f"sweep {state.sweep}: "
+                          f"fit={float(state.fits[-1]):.6f}")
+                if self._ckpt_mgr is not None:
+                    with obs_trace.span("checkpoint", sweep=state.sweep):
+                        self.checkpoint()
+                if self.rebalancer is not None \
+                        and state.sweep % cadence == 0 \
+                        and state.sweep < iters:
+                    with obs_trace.span("rebalance", sweep=state.sweep):
+                        self.rebalance_step()
+                if tol > 0 and len(state.fits) >= 2 and \
+                        abs(float(state.fits[-1])
+                            - float(state.fits[-2])) < tol:
+                    break
         return self.result()
 
     def imbalance_report(self) -> dict:
@@ -465,6 +545,36 @@ class CPSolver:
             "per_sweep": list(self.stream_events),
         }
 
+    def report(self) -> dict:
+        """This solver's unified metrics report: counters/gauges/latency
+        histograms plus the ``overlap``/``imbalance``/``exchange``/
+        ``stream`` sections — each a registered provider over the
+        pre-existing report method, value-identical to calling it
+        directly. (``exchange`` uses ``measure=False``: a report snapshot
+        must not force an HLO re-lower.)"""
+        return self.metrics.report()
+
+    def stream_monitor(self) -> StreamMonitor:
+        """Per-window exposed-vs-hidden transfer attribution built from
+        the streamer's ``h2d_build``/``h2d_wait`` events."""
+        return StreamMonitor(self.events)
+
+    def dump_trace(self, path: str) -> dict:
+        """Export every span the process tracer recorded as Chrome-trace
+        JSON (load in ``chrome://tracing`` or https://ui.perfetto.dev);
+        returns the trace dict. Spans nest run → sweep → mode_update →
+        {ec, exchange, h2d_window} (+ plan/compile/checkpoint/rebalance)."""
+        return obs_export.dump_chrome_trace(
+            path, obs_trace.get_tracer().records())
+
+    def dump_events(self, path: str) -> None:
+        """One-shot dump of the solver's structured event log as JSON
+        lines (the streaming twin is ``events.set_sink`` — attach early to
+        mirror events live)."""
+        with open(path, "w") as f:
+            for e in self.events.events():
+                f.write(json.dumps(e, default=str) + "\n")
+
     def audit(self, *, modes=None) -> list:
         """Run the :mod:`repro.analysis` passes against THIS compiled
         session: the plan rules over the live (possibly rebalanced) plan
@@ -506,8 +616,11 @@ def compile(plan: CPPlan, config: DecomposeConfig, *,
     (group, sub) mesh (unless one is passed), place every mode's shards, and
     build the jitted per-mode updates. Device-touching but tensor-data-free —
     cheap relative to ``plan()`` at scale."""
-    from repro.core.partition import validate_plan
-    validate_plan(plan)  # fail loudly before any device placement
-    if mesh is None:
-        mesh = dmttkrp.cp_mesh(plan.num_devices, plan.modes[0].r)
-    return CPSolver(plan, config, mesh)
+    if config.runtime.trace:
+        obs_trace.enable()  # before the span below so it is recorded
+    with obs_trace.span("compile", annotate=True):
+        from repro.core.partition import validate_plan
+        validate_plan(plan)  # fail loudly before any device placement
+        if mesh is None:
+            mesh = dmttkrp.cp_mesh(plan.num_devices, plan.modes[0].r)
+        return CPSolver(plan, config, mesh)

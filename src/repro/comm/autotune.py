@@ -14,8 +14,6 @@ requested one — the same staleness discipline as the EC cache.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -23,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.comm import collectives
 from repro.compat import shard_map
+from repro.obs import clock
 from repro.kernels import autotune as ec_autotune
 
 __all__ = ["autotune_chunk_rows", "DEFAULT_NUM_CHUNK_CANDIDATES"]
@@ -62,9 +61,9 @@ def _time_chunk(rows: int, rank: int, mesh, all_axes, chunk_rows: int,
     fn(x).block_until_ready()  # compile + warm
     best = float("inf")
     for _ in range(repeats):
-        t0 = time.perf_counter()
+        t0 = clock.now()
         fn(x).block_until_ready()
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, clock.now() - t0)
     return best
 
 

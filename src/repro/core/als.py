@@ -30,13 +30,14 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import mttkrp as dmttkrp
+from repro.obs import trace as obs_trace
 from repro.core.partition import CPPlan
 
 __all__ = ["ALSState", "init_factors", "make_mode_update",
            "make_sweep_updates", "als_sweep", "fit_from_stats",
            "unpad_factors", "StreamingModeUpdate",
            "make_streaming_mode_update", "make_streaming_sweep_updates",
-           "als_streaming_sweep"]
+           "als_streaming_sweep", "als_traced_sweep"]
 
 
 @dataclasses.dataclass
@@ -212,22 +213,67 @@ def als_streaming_sweep(plan: CPPlan, mesh: Mesh, streamer, stream_plans,
     transfer outlives the compute it was hidden behind (recorded by the
     streamer as exposed time)."""
     n = plan.nmodes
+    tracer = obs_trace.get_tracer()
+    factors, grams = list(state.factors), list(state.grams)
+    m_last = f_last = lam = None
+    for d in range(n):
+        with tracer.span("mode_update", mode=d, annotate=True):
+            upd = updates[d]
+            acc = upd.init_acc()
+            for k in range(stream_plans[d].num_shards):
+                with tracer.span("h2d_window", mode=d, shard=k):
+                    dev = streamer.get(d, k)
+                with tracer.span("ec", mode=d, shard=k, annotate=True):
+                    acc = upd.accumulate(acc, dev, factors)
+                    # double-buffer barrier: shard k+1's compute
+                    # data-depends on this accumulator, so waiting costs
+                    # the pipeline nothing — and it keeps the streamer's
+                    # exposed-time metric honest (time get() blocks =
+                    # transfer NOT hidden behind compute, rather than
+                    # host queue-ahead racing the async dispatch)
+                    jax.block_until_ready(acc)
+            others = [factors[w] for w in range(n) if w != d]
+            with tracer.span("exchange", mode=d, annotate=True):
+                f_d, g_d, m_d, lam = upd.finish(factors[d], acc, others,
+                                                grams)
+                if tracer.enabled:
+                    # only when traced: close the span at the true end of
+                    # merge/exchange/solve instead of at dispatch
+                    jax.block_until_ready(f_d)
+            factors[d], grams[d] = f_d, g_d
+            m_last, f_last = m_d, f_d
+    fit = fit_from_stats(plan.norm, m_last, f_last, lam, grams)
+    return ALSState(factors=factors, lam=lam, grams=grams,
+                    sweep=state.sweep + 1, fits=state.fits + [fit])
+
+
+def als_traced_sweep(plan: CPPlan, mesh: Mesh, dev_arrays: Sequence,
+                     state: ALSState,
+                     updates: Sequence[StreamingModeUpdate]) -> ALSState:
+    """Traced twin of :func:`als_sweep` for resident shards: runs each mode
+    through a :class:`StreamingModeUpdate` triple built for the *resident*
+    plan, so the EC partial (``accumulate`` on a zero accumulator — bitwise
+    equal to the fused MTTKRP partial) and the merge/exchange/solve
+    (``finish``) are separate jitted dispatches, each wrapped in its own
+    host span and synced at its end. Fits are bitwise identical to
+    :func:`als_sweep`; the added ``block_until_ready`` calls are the
+    documented cost of stage-attributed timing (the untraced path stays
+    fully async — :class:`repro.api.CPSolver` picks per sweep)."""
+    n = plan.nmodes
+    tracer = obs_trace.get_tracer()
     factors, grams = list(state.factors), list(state.grams)
     m_last = f_last = lam = None
     for d in range(n):
         upd = updates[d]
-        acc = upd.init_acc()
-        for k in range(stream_plans[d].num_shards):
-            dev = streamer.get(d, k)
-            acc = upd.accumulate(acc, dev, factors)
-            # double-buffer barrier: shard k+1's compute data-depends on
-            # this accumulator, so waiting costs the pipeline nothing —
-            # and it keeps the streamer's exposed-time metric honest
-            # (time get() blocks = transfer NOT hidden behind compute,
-            # rather than host queue-ahead racing the async dispatch)
-            jax.block_until_ready(acc)
-        others = [factors[w] for w in range(n) if w != d]
-        f_d, g_d, m_d, lam = upd.finish(factors[d], acc, others, grams)
+        with tracer.span("mode_update", mode=d, annotate=True):
+            with tracer.span("ec", mode=d, annotate=True):
+                acc = upd.accumulate(upd.init_acc(), dev_arrays[d], factors)
+                jax.block_until_ready(acc)
+            others = [factors[w] for w in range(n) if w != d]
+            with tracer.span("exchange", mode=d, annotate=True):
+                f_d, g_d, m_d, lam = upd.finish(factors[d], acc, others,
+                                                grams)
+                jax.block_until_ready(f_d)
         factors[d], grams[d] = f_d, g_d
         m_last, f_last = m_d, f_d
     fit = fit_from_stats(plan.norm, m_last, f_last, lam, grams)

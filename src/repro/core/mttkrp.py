@@ -32,6 +32,7 @@ from repro.compat import shard_map
 from repro.core.partition import (CPPlan, ModePartition,
                                   block_segment_descriptors)
 from repro.kernels import ops as kops
+from repro.obs import profiler as obs_profiler
 
 __all__ = ["DeviceArrays", "cp_mesh", "shard_plan_mode", "distributed_mttkrp",
            "make_mttkrp_fn", "shard_super_shard", "zero_partials",
@@ -212,16 +213,20 @@ def make_mttkrp_fn(
         tile_visited = tile_visited.reshape(tile_visited.shape[-1])
         seg_starts = seg_starts.reshape(seg_starts.shape[-2:])
         seg_rows = seg_rows.reshape(seg_rows.shape[-2:])
-        partial = _local_ec(meta, indices, values, local_rows, block_to_tile,
-                            tile_visited, seg_starts, seg_rows, list(factors),
-                            use_kernel=use_kernel,
-                            variant=variant, num_buffers=num_buffers,
-                            interpret=interpret)
-        merged = comm.merge_partials(
-            partial, sub_axis if part.r > 1 else None,
-            **exchange_spec.merge_kwargs())
-        out = comm.all_gather_axes(merged, all_axes,
-                                   **exchange_spec.gather_kwargs())
+        with obs_profiler.device_scope("ec_local"):
+            partial = _local_ec(meta, indices, values, local_rows,
+                                block_to_tile, tile_visited, seg_starts,
+                                seg_rows, list(factors),
+                                use_kernel=use_kernel,
+                                variant=variant, num_buffers=num_buffers,
+                                interpret=interpret)
+        with obs_profiler.device_scope("merge"):
+            merged = comm.merge_partials(
+                partial, sub_axis if part.r > 1 else None,
+                **exchange_spec.merge_kwargs())
+        with obs_profiler.device_scope("factor_exchange"):
+            out = comm.all_gather_axes(merged, all_axes,
+                                       **exchange_spec.gather_kwargs())
         return out
 
     in_specs = (
@@ -361,10 +366,12 @@ def make_partial_mttkrp_fn(
         tile_visited = tile_visited.reshape(tile_visited.shape[-1])
         seg_starts = seg_starts.reshape(seg_starts.shape[-2:])
         seg_rows = seg_rows.reshape(seg_rows.shape[-2:])
-        partial = _local_ec(meta, indices, values, local_rows, block_to_tile,
-                            tile_visited, seg_starts, seg_rows, list(factors),
-                            use_kernel=use_kernel, variant=variant,
-                            num_buffers=num_buffers, interpret=interpret)
+        with obs_profiler.device_scope("ec_local"):
+            partial = _local_ec(meta, indices, values, local_rows,
+                                block_to_tile, tile_visited, seg_starts,
+                                seg_rows, list(factors),
+                                use_kernel=use_kernel, variant=variant,
+                                num_buffers=num_buffers, interpret=interpret)
         return (acc + partial)[None, None]
 
     acc_spec = P(group_axes, sub_axis, None, None)
@@ -414,11 +421,13 @@ def make_streaming_finish_fn(
 
     def local_fn(acc):
         acc = acc.reshape(acc.shape[-2:])
-        merged = comm.merge_partials(
-            acc, sub_axis if part.r > 1 else None,
-            **exchange_spec.merge_kwargs())
-        return comm.all_gather_axes(merged, all_axes,
-                                    **exchange_spec.gather_kwargs())
+        with obs_profiler.device_scope("merge"):
+            merged = comm.merge_partials(
+                acc, sub_axis if part.r > 1 else None,
+                **exchange_spec.merge_kwargs())
+        with obs_profiler.device_scope("factor_exchange"):
+            return comm.all_gather_axes(merged, all_axes,
+                                        **exchange_spec.gather_kwargs())
 
     acc_spec = P(group_axes, sub_axis, None, None)
 

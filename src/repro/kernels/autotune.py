@@ -48,12 +48,13 @@ import dataclasses
 import json
 import os
 import re
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.obs import clock
 from repro.kernels import ops as kops
 
 __all__ = ["ECConfig", "autotune_ec", "cache_path", "representative_shard",
@@ -219,9 +220,9 @@ def _time_candidate(t, part, rank: int, variant: str, num_buffers: int,
     run(*args, factors).block_until_ready()  # compile + warm
     best = float("inf")
     for _ in range(repeats):
-        t0 = time.perf_counter()
+        t0 = clock.now()
         run(*args, factors).block_until_ready()
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, clock.now() - t0)
     return best
 
 
@@ -264,14 +265,17 @@ def autotune_ec(
     if not force:
         memo = _MEMO.get(key)
         if memo is not None and memo[0] == grid:
+            obs.get_registry().inc("autotune.ec.memo_hits")
             return memo[1]
         disk = _load_cache(cache_path()).get(key)
         if disk is not None and disk.get("grid") == grid:
+            obs.get_registry().inc("autotune.ec.cache_hits")
             cfg = ECConfig(int(disk["tile"]), int(disk["block_p"]),
                            int(disk["num_buffers"]),
                            dict(disk.get("timings", {})))
             _MEMO[key] = (grid, cfg)
             return cfg
+    obs.get_registry().inc("autotune.ec.misses")
 
     timings: dict[str, float] = {}
     best, best_t = None, float("inf")

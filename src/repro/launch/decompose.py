@@ -12,6 +12,8 @@
         --store tensor.store --plan-cache plans/   # out-of-core ingest path
     PYTHONPATH=src python -m repro.launch.decompose --preset paper \
         --store tensor.store --stream --memory-budget-mb 64   # epoch streaming
+    PYTHONPATH=src python -m repro.launch.decompose --preset paper \
+        --trace-out trace.json --events-out events.jsonl   # observability
 
 Runs the staged repro.api pipeline and reports preprocessing (plan) time
 separately from execution time, the way the paper does — pass --plan-cache
@@ -26,11 +28,16 @@ against bytes measured from the compiled HLO's collectives, e.g.::
     PYTHONPATH=src python -m repro.launch.decompose --preset paper \
         --set exchange.variant=overlap --set exchange.wire_dtype=bfloat16 \
         --exchange-report
+
+--trace-out enables the repro.obs span tracer for the whole invocation
+(plan → compile → execute, nested down to per-mode EC/exchange/H2D spans)
+and writes a Chrome-trace JSON loadable in chrome://tracing or Perfetto;
+--events-out mirrors every structured event (sweeps, rebalance points,
+per-window transfer timings) as greppable JSON lines, live.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 
 def main():
@@ -89,7 +96,20 @@ def main():
                     help="run the repro.analysis plan rules on the plan "
                          "(strict: abort on any error finding) and, with "
                          "warn/strict, audit the compiled solver's HLO")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable span tracing and write a Chrome-trace "
+                         "JSON (chrome://tracing / ui.perfetto.dev) "
+                         "covering plan/compile/execute")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="mirror structured events (sweeps, rebalance "
+                         "points, H2D windows) as JSON lines, flushed "
+                         "live")
     args = ap.parse_args()
+
+    from repro.obs import clock
+    from repro.obs import trace as obs_trace
+    if args.trace_out:
+        obs_trace.enable()
 
     import repro.api as api
     from repro.sparse.io import make_profile_tensor
@@ -130,12 +150,14 @@ def main():
           f"exchange={cfg.exchange.resolved_variant()}"
           f"/{cfg.exchange.wire_dtype}")
 
-    t0 = time.time()
+    t0 = clock.now()
     plan = api.plan(t, cfg, cache_dir=args.plan_cache,
                     analyze=args.analyze)
-    t_plan = time.time() - t0
+    t_plan = clock.now() - t0
     solver = api.compile(plan, cfg)
-    t_compile = time.time() - t0 - t_plan
+    t_compile = clock.now() - t0 - t_plan
+    if args.events_out:
+        solver.events.set_sink(args.events_out)
     if args.analyze != "off":
         findings = solver.audit()
         for f in findings:
@@ -146,9 +168,9 @@ def main():
             raise AnalysisError(errors(findings))
     if args.ckpt and not args.no_resume:
         solver.restore()
-    t1 = time.time()
+    t1 = clock.now()
     res = solver.run(args.iters, verbose=True)
-    t_exec = time.time() - t1
+    t_exec = clock.now() - t1
 
     hit = args.plan_cache is not None and api.CACHE_STATS["hits"] > 0
     print(f"plan {t_plan:.1f}s{' (cache hit)' if hit else ''} | "
@@ -213,6 +235,14 @@ def main():
         if ov["spill_saves"] or ov["spill_hits"]:
             print(f"  window spill: {ov['spill_saves']} saved, "
                   f"{ov['spill_hits']} replayed")
+    if args.trace_out:
+        solver.dump_trace(args.trace_out)
+        summary = obs_trace.get_tracer().summary()
+        stages = " ".join(f"{k}={v['count']}"
+                          for k, v in sorted(summary.items()))
+        print(f"trace: {args.trace_out} [{stages}]")
+    if args.events_out:
+        print(f"events: {args.events_out} ({len(solver.events)} lines)")
     solver.close()
 
 

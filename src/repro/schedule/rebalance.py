@@ -42,13 +42,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import clock
+from repro.obs import trace as obs_trace
 from repro.schedule import cost as cost_mod
 
 __all__ = ["GroupMigration", "ReplanDecision", "Rebalancer",
@@ -146,11 +147,13 @@ def measure_mode_device_times(part, factors: Sequence[jax.Array],
             cache[key] = fn
         fn(idx, vals, rows, b2t, factors, tile_mask=mask).block_until_ready()
         best = float("inf")
-        for _ in range(max(1, repeats)):
-            t0 = time.perf_counter()
-            fn(idx, vals, rows, b2t, factors,
-               tile_mask=mask).block_until_ready()
-            best = min(best, time.perf_counter() - t0)
+        with obs_trace.span("rebalance_probe", mode=part.mode, device=dev,
+                            annotate=True):
+            for _ in range(max(1, repeats)):
+                t0 = clock.now()
+                fn(idx, vals, rows, b2t, factors,
+                   tile_mask=mask).block_until_ready()
+                best = min(best, clock.now() - t0)
         times[dev] = best
     return times
 

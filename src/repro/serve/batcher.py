@@ -17,11 +17,11 @@ contract, unbounded queueing the failure mode this exists to prevent.
 from __future__ import annotations
 
 import threading
-import time
 from typing import Callable
 
 import numpy as np
 
+from repro.obs import clock
 from repro.serve.metrics import ServiceMetrics
 
 __all__ = ["MicroBatcher", "RejectedError"]
@@ -79,7 +79,7 @@ class MicroBatcher:
         if deadline_s is None:
             deadline_s = self.default_deadline_s
         indices = np.asarray(indices)
-        req = _Pending(indices, time.monotonic() + deadline_s)
+        req = _Pending(indices, clock.now() + deadline_s)
         with self._cv:
             if self._closed:
                 raise RejectedError("service is shutting down")
@@ -132,10 +132,10 @@ class MicroBatcher:
                 self._cv.wait()
             if self._closed:
                 return []
-            linger_until = time.monotonic() + self.max_delay_s
+            linger_until = clock.now() + self.max_delay_s
             while True:
                 rows = sum(r.indices.shape[0] for r in self._queue)
-                left = linger_until - time.monotonic()
+                left = linger_until - clock.now()
                 if rows >= self.max_batch or left <= 0:
                     break
                 self._cv.wait(timeout=left)
@@ -154,7 +154,7 @@ class MicroBatcher:
             batch = self._take_batch()
             if not batch:
                 return  # closed
-            now = time.monotonic()
+            now = clock.now()
             live = []
             for req in batch:
                 if req.deadline is not None and now > req.deadline:

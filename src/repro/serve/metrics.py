@@ -8,144 +8,75 @@ watches: query/reject/error counters, per-operation latency percentiles
 depth, the published snapshot's version and age, and a refit-in-progress
 gauge.
 
-All mutators are thread-safe (queries arrive from many client threads,
-refits from a background thread); reads take the same lock and return
-plain-python copies.
+Since the unified observability layer landed this module is a thin view
+over :class:`repro.obs.MetricsRegistry` — the counters/gauges/histograms
+live in the registry (one per service, injectable for sharing), and
+``metrics_report()`` is value-identical to the pre-registry report.
+``LatencyHistogram`` is the serving-era name for
+:class:`repro.obs.LogHistogram` at its default 10 µs → ~100 s geometry;
+all mutators remain thread-safe (queries arrive from many client threads,
+refits from a background thread) and snapshots are taken under the same
+locks as the recording paths.
 """
 from __future__ import annotations
 
-import threading
-import time
-
-import numpy as np
+from repro.obs import clock
+from repro.obs.metrics import LogHistogram, MetricsRegistry
 
 __all__ = ["LatencyHistogram", "ServiceMetrics"]
 
-
-class LatencyHistogram:
-    """Fixed log-spaced latency histogram: 10 µs → ~100 s at 10 buckets
-    per decade. Percentile estimates are exact to one bucket width (≤ ~26%
-    relative — plenty for p50/p99 dashboards) with O(buckets) memory
-    regardless of traffic."""
-
-    LO, HI, PER_DECADE = 1e-5, 1e2, 10
-
-    def __init__(self) -> None:
-        ndec = int(np.log10(self.HI / self.LO))
-        # bucket i covers [edges[i], edges[i+1]); +/- overflow buckets
-        self.edges = np.logspace(np.log10(self.LO), np.log10(self.HI),
-                                 ndec * self.PER_DECADE + 1)
-        self.counts = np.zeros(self.edges.size + 1, np.int64)
-        self.total_s = 0.0
-
-    @property
-    def count(self) -> int:
-        return int(self.counts.sum())
-
-    def record(self, seconds: float) -> None:
-        self.counts[int(np.searchsorted(self.edges, seconds, "right"))] += 1
-        self.total_s += seconds
-
-    def percentile(self, q: float) -> float | None:
-        """Latency (seconds) at quantile ``q`` in [0, 1]; None when empty.
-        Returns the upper edge of the bucket holding the q-th sample
-        (a conservative — never understated — estimate)."""
-        total = self.count
-        if total == 0:
-            return None
-        target = q * total
-        cum = np.cumsum(self.counts)
-        i = int(np.searchsorted(cum, target, "left"))
-        if i == 0:
-            return float(self.edges[0])
-        if i >= self.edges.size:
-            return float(self.edges[-1])
-        return float(self.edges[i])
-
-    def snapshot(self) -> dict:
-        return {
-            "count": self.count,
-            "total_s": self.total_s,
-            "mean_ms": (self.total_s / self.count * 1e3
-                        if self.count else None),
-            "p50_ms": _ms(self.percentile(0.50)),
-            "p99_ms": _ms(self.percentile(0.99)),
-        }
-
-
-def _ms(seconds: float | None) -> float | None:
-    return None if seconds is None else seconds * 1e3
+# the historical serving name; identical default bucket geometry
+LatencyHistogram = LogHistogram
 
 
 class ServiceMetrics:
-    """Counters + gauges + per-operation :class:`LatencyHistogram`\\ s."""
+    """Counters + gauges + per-operation :class:`LatencyHistogram`\\ s —
+    a named view over a :class:`~repro.obs.MetricsRegistry` (pass one to
+    share it with other components; by default each service owns its
+    own)."""
 
-    def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self._counters: dict[str, int] = {}
-        self._gauges: dict[str, float | int | None] = {}
-        self._hists: dict[str, LatencyHistogram] = {}
-        self._start = time.monotonic()
+    def __init__(self, registry: MetricsRegistry | None = None) -> None:
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self._start = clock.now()
 
     # -- mutators ----------------------------------------------------------
     def inc(self, name: str, n: int = 1) -> None:
-        with self._lock:
-            self._counters[name] = self._counters.get(name, 0) + n
+        self.registry.inc(name, n)
 
     def set_gauge(self, name: str, value) -> None:
-        with self._lock:
-            self._gauges[name] = value
+        self.registry.set_gauge(name, value)
 
     def observe(self, op: str, seconds: float) -> None:
-        with self._lock:
-            hist = self._hists.get(op)
-            if hist is None:
-                hist = self._hists[op] = LatencyHistogram()
-            hist.record(seconds)
+        self.registry.observe(op, seconds)
 
-    class _Timer:
-        def __init__(self, metrics: "ServiceMetrics", op: str):
-            self.metrics, self.op = metrics, op
-
-        def __enter__(self):
-            self.t0 = time.perf_counter()
-            return self
-
-        def __exit__(self, *exc):
-            self.metrics.observe(self.op, time.perf_counter() - self.t0)
-
-    def time(self, op: str) -> "ServiceMetrics._Timer":
+    def time(self, op: str):
         """``with metrics.time("reconstruct"): ...`` — records one latency
         sample on exit (exceptions included: a failed query still took
         time)."""
-        return self._Timer(self, op)
+        return self.registry.time(op)
 
     # -- reads -------------------------------------------------------------
     def counter(self, name: str) -> int:
-        with self._lock:
-            return self._counters.get(name, 0)
+        return self.registry.counter(name)
 
     def gauge(self, name: str, default=None):
-        with self._lock:
-            return self._gauges.get(name, default)
+        return self.registry.gauge(name, default)
 
     def latency(self, op: str) -> dict | None:
-        with self._lock:
-            hist = self._hists.get(op)
-            return None if hist is None else hist.snapshot()
+        return self.registry.latency(op)
 
     def metrics_report(self) -> dict:
         """The JSON the ``python -m repro.serve`` entrypoint prints and the
         load bench records: uptime, qps over the process lifetime, all
         counters/gauges, and per-op latency percentiles."""
-        with self._lock:
-            uptime = time.monotonic() - self._start
-            queries = self._counters.get("queries_total", 0)
-            return {
-                "uptime_s": uptime,
-                "qps": queries / uptime if uptime > 0 else 0.0,
-                "counters": dict(self._counters),
-                "gauges": dict(self._gauges),
-                "latency": {op: h.snapshot()
-                            for op, h in self._hists.items()},
-            }
+        snap = self.registry.snapshot()
+        uptime = clock.now() - self._start
+        queries = snap["counters"].get("queries_total", 0)
+        return {
+            "uptime_s": uptime,
+            "qps": queries / uptime if uptime > 0 else 0.0,
+            "counters": snap["counters"],
+            "gauges": snap["gauges"],
+            "latency": snap["latency"],
+        }

@@ -43,7 +43,6 @@ import os
 import shutil
 import tempfile
 import threading
-import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Hashable, Iterable
@@ -52,6 +51,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.analysis import runtime as _lockcheck
+from repro.obs import clock
 from repro.core.mttkrp import (DeviceArrays, shard_plan_mode,
                                shard_super_shard)
 from repro.core.partition import CPPlan
@@ -142,8 +142,11 @@ class _StreamerBase:
     one key) and :meth:`_key_nbytes` (per-device bytes a key holds, for
     budget accounting)."""
 
-    def __init__(self, *, prefetch: int):
+    def __init__(self, *, prefetch: int, events=None):
         self.prefetch = prefetch
+        # optional repro.obs.EventLog: per-window h2d_build/h2d_wait events
+        # (the StreamMonitor's input); None = no structured emission
+        self._events = events
         self._resident: OrderedDict[Hashable, DeviceArrays] = OrderedDict()
         self._pending: OrderedDict[Hashable, Future] = OrderedDict()
         self._pool = ThreadPoolExecutor(max_workers=1,
@@ -167,15 +170,23 @@ class _StreamerBase:
     def _key_nbytes(self, key) -> int:
         return 0
 
+    def _key_fields(self, key) -> dict:
+        """Event-log fields naming one key (mode/shard)."""
+        return {"mode": key, "shard": None}
+
     # -- residency engine --------------------------------------------------
     def _timed_build(self, key) -> DeviceArrays:
-        t0 = time.perf_counter()
+        t0 = clock.now()
         arrays = self._build(key)
-        dt = time.perf_counter() - t0
+        dt = clock.now() - t0
         with self._stats_lock:
             self.stats["transfer_s"] += dt
             self.stats["builds"] += 1
             self.stats["bytes_streamed"] += self._key_nbytes(key)
+        if self._events is not None:
+            self._events.emit("h2d_build", build_s=dt,
+                              bytes=self._key_nbytes(key),
+                              **self._key_fields(key))
         return arrays
 
     def _track_add(self, key) -> None:  # holds: _stats_lock
@@ -203,10 +214,12 @@ class _StreamerBase:
         or loading synchronously on a cold miss). Block time is recorded as
         exposed transfer time — the part double buffering failed to hide."""
         fut = self._pending.pop(key, None)
-        t0 = time.perf_counter()
+        t0 = clock.now()
+        cold = False
         if fut is not None:
             self._resident[key] = fut.result()
         elif key not in self._resident:
+            cold = True
             with self._stats_lock:
                 self._track_add(key)
                 self.stats["cold_builds"] += 1
@@ -214,8 +227,12 @@ class _StreamerBase:
         else:
             t0 = None
         if t0 is not None:
+            waited = clock.now() - t0
             with self._stats_lock:
-                self.stats["exposed_s"] += time.perf_counter() - t0
+                self.stats["exposed_s"] += waited
+            if self._events is not None:
+                self._events.emit("h2d_wait", wait_s=waited, cold=cold,
+                                  **self._key_fields(key))
         self._resident.move_to_end(key)
         return self._resident[key]
 
@@ -323,8 +340,8 @@ class ShardStreamer(_StreamerBase):
     """Whole-shard-per-mode streamer (keys are mode ids)."""
 
     def __init__(self, plan: CPPlan, mesh: Mesh, *, prefetch: int = 1,
-                 group_axes=("group",), sub_axis="sub"):
-        super().__init__(prefetch=prefetch)
+                 group_axes=("group",), sub_axis="sub", events=None):
+        super().__init__(prefetch=prefetch, events=events)
         self.plan = plan
         self.mesh = mesh
         self.group_axes = group_axes
@@ -384,10 +401,10 @@ class SuperShardStreamer(_StreamerBase):
 
     def __init__(self, plan: CPPlan, mesh: Mesh, stream_plans, *,
                  buffers: int = 2, spill: WindowSpill | None = None,
-                 group_axes=("group",), sub_axis="sub"):
+                 group_axes=("group",), sub_axis="sub", events=None):
         if buffers < 1:
             raise ValueError("buffers must be >= 1")
-        super().__init__(prefetch=buffers - 1)
+        super().__init__(prefetch=buffers - 1, events=events)
         self.plan = plan
         self.mesh = mesh
         self.stream_plans = list(stream_plans)
@@ -418,6 +435,9 @@ class SuperShardStreamer(_StreamerBase):
 
     def _key_nbytes(self, key) -> int:
         return self.stream_plans[key[0]].shard_bytes
+
+    def _key_fields(self, key) -> dict:
+        return {"mode": key[0], "shard": key[1]}
 
     def _next_key(self, key):
         mode, k = key

@@ -24,10 +24,11 @@ import json
 import os
 import shutil
 import threading
-import time
 from typing import Any
 
 import numpy as np
+
+from repro.obs import clock
 
 __all__ = ["CheckpointManager"]
 
@@ -149,7 +150,7 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        manifest = {"step": step, "time": time.time(), "arrays": {}}
+        manifest = {"step": step, "time": clock.walltime(), "arrays": {}}
         for path, arr in flat.items():
             fname = path.replace("/", "__") + ".npy"
             fpath = os.path.join(tmp, fname)
